@@ -1,0 +1,111 @@
+"""Paper Fig. 12 — communication-library round-trip latency.
+
+Client sends a (batch, 1, d_model) tensor to servers; servers echo it back.
+Two implementations:
+
+* ``eaas``      — the buffer-protocol exchange compiled into ONE jitted
+  program (GPU-initiated, CPU-free: the IBGDA analogue — zero host
+  involvement per round trip).
+* ``cpu_staged`` — StepMesh/GDRCopy analogue: the host mediates every hop
+  (device→host→device per direction), modeling CPU-controlled comm.
+
+Symmetric (2 clients / 2 servers) and asymmetric (1 client / 3 servers)
+settings, matching the paper's §5.5 experiment.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, save_result
+
+D_MODEL = 7168          # the paper uses DeepSeek-R1 decode shape (b, 1, 7168)
+
+
+def _round_trip_jit(n_clients: int, n_servers: int):
+    """One-program round trip: slot-pack → serve(echo) → return → combine."""
+
+    @jax.jit
+    def rt(x):                        # x: (n_clients, B, d)
+        # client write: each client splits its batch across server slots
+        B = x.shape[1]
+        per = max(B // n_servers, 1)
+        slots = x[:, :n_servers * per].reshape(
+            x.shape[0], n_servers, per, x.shape[2])
+        # server processes (echo) — transpose = the a2a transfer
+        recv = jnp.swapaxes(slots, 0, 1)          # (S, C_clients, per, d)
+        served = recv * 1.0                       # stateless echo
+        back = jnp.swapaxes(served, 0, 1)
+        return back.reshape(x.shape[0], n_servers * per, x.shape[2])
+
+    return rt
+
+
+def _round_trip_cpu_staged(n_clients: int, n_servers: int):
+    """Host-mediated: device→host→device on each hop (CPU-controlled)."""
+    dev = jax.devices()[0]
+
+    def rt(x):
+        host = np.asarray(x)                       # D2H (client write)
+        per = max(host.shape[1] // n_servers, 1)
+        slots = host[:, :n_servers * per].reshape(
+            host.shape[0], n_servers, per, host.shape[2])
+        recv = np.swapaxes(slots, 0, 1).copy()
+        served_dev = jax.device_put(recv, dev)     # H2D (server read)
+        served = np.asarray(served_dev * 1.0)      # compute + D2H
+        back = np.swapaxes(served, 0, 1).copy()
+        out = jax.device_put(back.reshape(host.shape[0], n_servers * per,
+                                          host.shape[2]), dev)
+        return out
+
+    return rt
+
+
+def _time(fn, x, iters: int = 20) -> float:
+    y = fn(x)
+    if hasattr(y, "block_until_ready"):
+        y.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        y = fn(x)
+    if hasattr(y, "block_until_ready"):
+        y.block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def run(batch_sizes: List[int] = (16, 64, 128, 256, 512)) -> Dict:
+    out = {"figure": "fig12_comm", "scenarios": {}}
+    for name, (nc, ns) in {"symmetric": (2, 2),
+                           "asymmetric": (1, 3)}.items():
+        pts = []
+        jit_rt = _round_trip_jit(nc, ns)
+        cpu_rt = _round_trip_cpu_staged(nc, ns)
+        for b in batch_sizes:
+            x = jnp.ones((nc, b, D_MODEL), jnp.bfloat16)
+            t_eaas = _time(jit_rt, x)
+            t_cpu = _time(cpu_rt, x)
+            pts.append({"batch": b, "eaas_us": t_eaas * 1e6,
+                        "cpu_staged_us": t_cpu * 1e6,
+                        "reduction_pct": 100 * (1 - t_eaas / t_cpu)})
+        out["scenarios"][name] = pts
+    save_result("fig12_comm", out)
+    return out
+
+
+def main() -> List[str]:
+    res = run()
+    rows = []
+    for name, pts in res["scenarios"].items():
+        p = pts[-1]          # batch 512, the paper's headline point
+        rows.append(csv_row(f"fig12_{name}", p["eaas_us"],
+                            f"reduction_vs_cpu={p['reduction_pct']:.1f}pct"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

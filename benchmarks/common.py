@@ -1,0 +1,58 @@
+"""Shared benchmark plumbing: reduced serving setups, timing, CSV output."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving import EngineConfig, Request, SamplingParams, ServingEngine
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "bench")
+
+
+def bench_model_cfg(arch: str = "deepseek-r1"):
+    """The paper's evaluation model family, reduced to CPU scale."""
+    return get_config(arch).reduced()
+
+
+def make_requests(n: int, prompt_len: int = 8, max_new: int = 16,
+                  vocab: int = 512, seed: int = 0) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, vocab, size=prompt_len).astype(
+        np.int32), SamplingParams(max_new_tokens=max_new)) for i in range(n)]
+
+
+def run_engine(cfg, ecfg: EngineConfig, requests: Iterable[Request],
+               on_step=None, warmup: bool = True, seed: int = 0):
+    eng = ServingEngine(cfg, ecfg, seed=seed)
+    if warmup:  # compile prefill+decode outside the measured window
+        w = make_requests(1, prompt_len=8, max_new=2, vocab=cfg.vocab_size,
+                          seed=99)[0]
+        eng.submit(w)
+        eng.run(max_steps=10)
+        eng.metrics.__init__()
+        eng.clock = 0.0
+        eng.step_idx = 0
+        eng.halted_until = -1
+    for r in requests:
+        eng.submit(r)
+    metrics = eng.run(max_steps=20_000, on_step=on_step)
+    return eng, metrics
+
+
+def save_result(name: str, payload: Dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

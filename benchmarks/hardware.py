@@ -1,0 +1,9 @@
+"""Target-hardware constants for the roofline analysis (v5e-like TPU)."""
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+CHIP_HBM_BYTES = 16 * 2**30     # 16 GiB
+
+SINGLE_POD_CHIPS = 256
+MULTI_POD_CHIPS = 512

@@ -1,0 +1,75 @@
+"""HLO collective attribution: group collective bytes by source op_name.
+
+The perf-iteration microscope: for a dry-run cell, compile a 1-unit probe
+and report which *source operations* (from HLO metadata) the all-gathers /
+all-reduces / a2a traffic come from.  This is how hypotheses in
+EXPERIMENTS.md §Perf are formed and validated.
+
+Usage:  PYTHONPATH=src:. python -m benchmarks.hlo_attr <arch> <shape>
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from collections import defaultdict
+from typing import Dict, Tuple
+
+OP_RE = re.compile(
+    r"(?<![%\w-])(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?(?:\.\d+)?\s*\(")
+SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64)\[([\d,]*)\]")
+META_RE = re.compile(r'op_name="([^"]*)"')
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+
+
+def attribute(hlo_text: str, top: int = 20) -> Dict[Tuple[str, str], float]:
+    groups = defaultdict(float)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = OP_RE.search(line)
+        if not m or m.group(2) == "-done":
+            continue
+        kind = m.group(1)
+        lhs = line[:m.start()]
+        if "=" not in lhs:
+            continue
+        nbytes = 0
+        for dm in SHAPE_RE.finditer(lhs):
+            n = 1
+            for d in dm.group(2).split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dm.group(1)]
+        meta = META_RE.search(line)
+        src = meta.group(1) if meta else "<no-metadata>"
+        # trim jit scopes to the interesting tail
+        src = "/".join(src.split("/")[-3:])[-90:]
+        groups[(kind, src)] += nbytes
+        counts[(kind, src)] += 1
+    return groups, counts
+
+
+def report(arch: str, shape_name: str, multi_pod: bool = False,
+           top: int = 20) -> None:
+    from repro.configs import get_config, shape_by_name
+    from repro.launch.dryrun import build_cell, probe_plan
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    probes, _ = probe_plan(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = shape_by_name(shape_name)
+    fn, args = build_cell(arch, shape, mesh, cfg=probes[0], unroll=True)
+    compiled = fn.lower(*args).compile()
+    groups, counts = attribute(compiled.as_text())
+    print(f"== {arch} × {shape_name} (1-unit probe) — "
+          f"collective bytes by source ==")
+    for (kind, src), b in sorted(groups.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"  {b/2**20:10.1f} MiB  ×{counts[(kind, src)]:<4d} {kind:18s} {src}")
+
+
+if __name__ == "__main__":
+    report(sys.argv[1], sys.argv[2],
+           multi_pod="--multi-pod" in sys.argv)

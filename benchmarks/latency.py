@@ -1,0 +1,42 @@
+"""Paper Fig. 9 — decoding throughput vs inter-token latency."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import (bench_model_cfg, csv_row, make_requests,
+                               run_engine, save_result)
+from repro.serving import EngineConfig
+
+
+def run(loads: List[int] = (8, 16, 32), max_new: int = 12) -> Dict:
+    cfg = bench_model_cfg()
+    out = {"figure": "fig9_latency", "modes": {}}
+    for mode in ("eaas", "monolithic_ep", "tp"):
+        pts = []
+        for load in loads:
+            ecfg = EngineConfig(mode=mode, num_servers=4, max_batch=4,
+                                max_seq=64, tp_batch_cap=2, n_redundant=2)
+            reqs = make_requests(load, max_new=max_new, vocab=cfg.vocab_size)
+            _, m = run_engine(cfg, ecfg, reqs)
+            pts.append({"load": load, "tok_per_s": m.decode_throughput,
+                        **{f"itl_{k}": v for k, v in m.itl_stats().items()}})
+        out["modes"][mode] = pts
+    save_result("fig9_latency", out)
+    return out
+
+
+def main() -> List[str]:
+    res = run()
+    rows = []
+    for mode, pts in res["modes"].items():
+        best = max(pts, key=lambda p: p["tok_per_s"])
+        rows.append(csv_row(
+            f"fig9_{mode}", best["itl_mean"] * 1e6,
+            f"tok_per_s={best['tok_per_s']:.2f};itl_p99_ms="
+            f"{best['itl_p99']*1e3:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,137 @@
+"""Roofline analysis (deliverable (g)).
+
+Reads the dry-run artifacts (experiments/dryrun/*.json) and derives, per
+(arch × shape × mesh):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+(cost_analysis is per-device, so dividing by per-chip rates is equivalent to
+the global-FLOPs/(chips × peak) formulation.)  Also reports MODEL_FLOPS =
+6·N·D (dense) or 6·N_active·D (MoE) and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs, the dominant term, and a one-line "what would move
+it" note.  Output: markdown table for EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.hardware import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.configs import get_config, shape_by_name
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def model_flops(arch: str, shape_name: str, num_devices: int) -> float:
+    """Per-device useful FLOPs: 6·N·D train (fwd+bwd), 2·N·D inference."""
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    n = cfg.num_active_params() if cfg.is_moe else cfg.num_params()
+    if shape.kind == "train":
+        d_tokens = shape.global_batch * shape.seq_len
+        total = 6 * n * d_tokens
+    elif shape.kind == "prefill":
+        d_tokens = shape.global_batch * shape.seq_len
+        total = 2 * n * d_tokens
+    else:  # decode: one token per sequence
+        total = 2 * n * shape.global_batch
+    return total / num_devices
+
+
+def _bottleneck_note(dom: str, arch: str, shape: str) -> str:
+    notes = {
+        "compute": "raise per-chip arithmetic intensity: larger expert "
+                   "capacity utilization / fewer remat recomputes",
+        "memory": "reduce HBM traffic: fuse dispatch/combine, shard the "
+                  "residual stream (SP), bf16 intermediates",
+        "collective": "cut bytes on the wire: quantized dispatch payloads, "
+                      "overlap a2a with dense compute, fewer ZeRO gathers",
+    }
+    return notes[dom]
+
+
+def analyze_cell(path: str) -> Optional[Dict]:
+    r = json.load(open(path))
+    if r.get("status") != "ok":
+        return {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "status": r.get("status"), "reason": r.get("reason", "")}
+    rc = r.get("roofline_corrected", {})
+    if not rc or "error" in rc:
+        return None
+    flops = rc.get("flops", 0.0)
+    membytes = rc.get("bytes", 0.0)
+    coll = rc.get("coll_total", 0.0)
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = membytes / HBM_BW
+    t_n = coll / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_n}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(r["arch"], r["shape"], r["num_devices"])
+    bound = max(terms.values())
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "status": "ok",
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dom,
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS_BF16) / bound if bound else 0.0,
+        "note": _bottleneck_note(dom, r["arch"], r["shape"]),
+        "bytes_per_device_hbm": r["memory"].get("argument_bytes"),
+    }
+
+
+def run(mesh_filter: str = "pod16x16") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        if mesh_filter not in path:
+            continue
+        row = analyze_cell(path)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful ratio | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip: {r.get('reason','')[:40]} | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return hdr + "\n".join(lines)
+
+
+def main() -> List[str]:
+    rows = run()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    out = []
+    for r in ok:
+        out.append(f"roofline_{r['arch']}_{r['shape']},0.0,"
+                   f"dominant={r['dominant']};frac="
+                   f"{r['roofline_fraction']:.3f}")
+    if ok:
+        md = to_markdown(rows)
+        path = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "roofline_table.md")
+        with open(path, "w") as f:
+            f.write(md)
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

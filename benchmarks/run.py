@@ -1,0 +1,41 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Heavy figures can be skipped with
+REPRO_BENCH_FAST=1 (CI smoke).
+"""
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+    from benchmarks import (ablation, comm, fault_tolerance, latency,
+                            roofline, scaling, throughput)
+
+    suites = [("fig12_comm", comm.main),
+              ("fig13_ablation", ablation.main),
+              ("roofline", roofline.main)]
+    if not fast:
+        suites = [("fig8_throughput", throughput.main),
+                  ("fig9_latency", latency.main),
+                  ("fig10_fault_tolerance", fault_tolerance.main),
+                  ("fig11_scaling", scaling.main)] + suites
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        try:
+            for row in fn():
+                print(row)
+        except Exception as e:
+            failures += 1
+            print(f"{name},nan,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

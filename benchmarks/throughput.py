@@ -1,0 +1,61 @@
+"""Paper Fig. 8 — end-to-end decoding throughput vs request load, for two
+cluster sizes, EAAS vs SGL-EP (monolithic) vs SGL-TP.
+
+CPU-scale reproduction on the reduced DeepSeek-R1-family config.  The TP
+baseline's weight replication is modeled by capping its slot pool (the
+paper: TP must replicate the model per 16-GPU unit, halving usable batch).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import (bench_model_cfg, csv_row, make_requests,
+                               run_engine, save_result)
+from repro.serving import EngineConfig
+
+
+def run(loads: List[int] = (8, 16, 32), clusters: Dict[str, Dict] = None,
+        max_new: int = 12) -> Dict:
+    cfg = bench_model_cfg()
+    clusters = clusters or {
+        "large": dict(num_servers=8, max_batch=8),
+        "small": dict(num_servers=4, max_batch=4),
+    }
+    out = {"figure": "fig8_throughput", "clusters": {}}
+    for cname, cparams in clusters.items():
+        rows = {}
+        for mode in ("eaas", "monolithic_ep", "tp"):
+            pts = []
+            for load in loads:
+                ecfg = EngineConfig(
+                    mode=mode, num_servers=cparams["num_servers"],
+                    max_batch=cparams["max_batch"], max_seq=64,
+                    tp_batch_cap=max(cparams["max_batch"] // 2, 1),
+                    n_redundant=2)
+                reqs = make_requests(load, max_new=max_new,
+                                     vocab=cfg.vocab_size)
+                _, m = run_engine(cfg, ecfg, reqs)
+                pts.append({"load": load,
+                            "tok_per_s": m.decode_throughput,
+                            "completed": m.completed})
+            rows[mode] = pts
+        out["clusters"][cname] = rows
+    save_result("fig8_throughput", out)
+    return out
+
+
+def main() -> List[str]:
+    res = run()
+    rows = []
+    for cname, modes in res["clusters"].items():
+        for mode, pts in modes.items():
+            peak = max(p["tok_per_s"] for p in pts)
+            us = 1e6 / max(peak, 1e-9)
+            rows.append(csv_row(f"fig8_{cname}_{mode}", us,
+                                f"peak_tok_per_s={peak:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,18 @@
+"""EAAS core: experts disaggregated into independent, stateless services.
+
+Modules (paper section in parens):
+  router          gating + top-k (+ aux losses)              (§2.1)
+  mapping         expert→server service discovery table      (Fig. 6)
+  dispatch        buffer-slot packing / combine              (§3.2)
+  comm            client-initiated transfers (a2a/psum)      (§4.4, adapted)
+  expert_server   stateless dynamic-batch server             (§3.3, Fig. 5)
+  moe_layer       the composable EaasMoELayer                (Fig. 4)
+  monolithic      EP / TP baselines                          (§2.2)
+  monitor         heartbeats, state flags, failover          (§3.4, Fig. 6)
+  load_balance    EPLB-style replication planner             (§4.5)
+  elastic         fine-grained server-pool scaling           (§5.3)
+  overlap         double-batch-overlap                       (§4.2)
+"""
+
+from repro.core.moe_layer import (MoERuntime, MoEStats, default_runtime,
+                                  eaas_moe_apply, init_eaas_moe)  # noqa: F401

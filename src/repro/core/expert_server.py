@@ -1,0 +1,161 @@
+"""The stateless expert server (paper §3.3, Fig. 5).
+
+A server aggregates every ready client slot into one dynamic batch,
+reorganizes tokens by (local) expert, runs grouped GEMM over the active
+groups only (group-shrink), weights by the router scores carried in the
+payload, and writes the results back into the same slot layout.
+
+The server is a *pure function* — it holds no sequence state and initiates
+no communication (comm.py is invoked by the client side only).  That purity
+is the paper's statelessness argument, and it is what makes replication,
+failover and elastic scaling trivial.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models.common import dense_init
+
+
+class ServerWeights(NamedTuple):
+    """One server's expert weights: primaries + redundant (replica) slots.
+
+    Shapes (single server view):
+      w_gate/w_up: (L, d, f)   w_down: (L, f, d)
+    where L = E/S primaries + n_red redundant slots.
+    ``local_table``: (E,) int32 — global expert id -> local slot (or -1).
+    """
+
+    w_gate: jax.Array
+    w_up: jax.Array
+    w_down: jax.Array
+    local_table: jax.Array
+
+
+def init_expert_weights(key, cfg: ModelConfig) -> Dict:
+    """Global expert bank: (E, d, f) — sharded over the server axis at launch."""
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_expert, m.num_experts
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, f, dt))(
+            jax.random.split(ks[0], E)),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, f, dt))(
+            jax.random.split(ks[1], E)),
+        "w_down": jax.vmap(lambda k: dense_init(k, f, d, dt))(
+            jax.random.split(ks[2], E)),
+    }
+
+
+def make_local_table(num_experts: int, num_servers: int,
+                     redundant_table: np.ndarray) -> np.ndarray:
+    """(S, E) global-expert-id → local-slot lookup (-1 = not hosted).
+
+    Slots 0..E/S-1 are the block-contiguous primaries; the rest mirror
+    ``redundant_table``.  This is *placement data* (runtime, not params):
+    rebalancing rewrites it without touching the compiled program.
+    """
+    E, S = num_experts, num_servers
+    per = E // S
+    assert per * S == E
+    primary_ids = np.arange(E, dtype=np.int32).reshape(S, per)
+    red = np.asarray(redundant_table, np.int32)              # (S, n_red)
+    local_ids = np.concatenate([primary_ids, red], axis=1)   # (S, L)
+    local_table = np.full((S, E), -1, np.int32)
+    for s in range(S):
+        for slot, e in enumerate(local_ids[s]):
+            if e >= 0 and local_table[s, e] < 0:
+                local_table[s, e] = slot
+    return local_table
+
+
+def build_server_weights(bank: Dict, num_servers: int,
+                         redundant_table: np.ndarray) -> Dict:
+    """Materialize per-server weight arrays from the global bank.
+
+    Returns stacked per-server arrays (S, L, ...) (shard dim0 over the server
+    axis at launch).  Redundant slots are *copies* — replication costs
+    memory, exactly as in the paper.
+    """
+    E = bank["w_gate"].shape[0]
+    S = num_servers
+    per = E // S
+    assert per * S == E
+
+    primary_ids = np.arange(E, dtype=np.int32).reshape(S, per)
+    red = np.asarray(redundant_table, np.int32)              # (S, n_red)
+    local_ids = np.concatenate([primary_ids, red], axis=1)   # (S, L)
+
+    gather_ids = jnp.asarray(np.maximum(local_ids, 0))       # (S, L)
+    mask = jnp.asarray(local_ids >= 0)[..., None, None]
+
+    def per_server(w):
+        return jnp.where(mask, w[gather_ids], 0)
+
+    return {
+        "w_gate": per_server(bank["w_gate"]),                # (S, L, d, f)
+        "w_up": per_server(bank["w_up"]),
+        "w_down": per_server(bank["w_down"]),
+    }
+
+
+class ServeStats(NamedTuple):
+    miss: jax.Array           # tokens whose expert this server doesn't host
+    served: jax.Array         # valid tokens processed
+
+
+def serve(tokens: jax.Array, expert_ids: jax.Array, scores: jax.Array,
+          counts: jax.Array, weights: ServerWeights, *,
+          impl: str = "auto") -> Tuple[jax.Array, ServeStats]:
+    """Process one aggregated dynamic batch on one server.
+
+    tokens: (Clients, C, d) — the server's view of every client slot;
+    expert_ids/scores: (Clients, C); counts: (Clients,) header.
+    Returns (Clients, C, d) score-weighted outputs (zeros on invalid slots)
+    and ServeStats.
+    """
+    Sc, C, d = tokens.shape
+    M = Sc * C
+    x = tokens.reshape(M, d)
+    eid = expert_ids.reshape(M)
+    sc = scores.reshape(M)
+    valid = (jnp.arange(C)[None, :] < counts[:, None]).reshape(M)
+    valid &= eid >= 0
+
+    L = weights.w_gate.shape[0]
+    slot = jnp.where(valid, weights.local_table[jnp.clip(eid, 0)], L)
+    hosted = slot >= 0
+    miss = jnp.sum(valid & ~hosted)
+    slot = jnp.where(hosted, slot, L)                         # L = padding grp
+
+    # ---- reorganize tokens by local expert (paper Fig. 5) --------------
+    order = jnp.argsort(slot)                                 # stable
+    xs = x[order]
+    group_sizes = jnp.bincount(slot, length=L + 1)[:L]        # drop pad group
+
+    # ---- grouped GEMM over active groups only (group-shrink) -----------
+    # per-expert capacity for the dense lowering: ideal share × the buffer
+    # capacity factor (under-provisioned experts drop, exactly like slots)
+    ecap = max(8, ((-(-(M * 5) // (4 * L))) + 7) // 8 * 8)
+    gg = lambda a, w: kops.grouped_gemm(a, w, group_sizes, impl=impl,
+                                        expert_capacity=ecap)
+    h_gate = gg(xs, weights.w_gate)
+    h_up = gg(xs, weights.w_up)
+    h = jax.nn.silu(h_gate.astype(jnp.float32)).astype(h_up.dtype) * h_up
+    y = gg(h, weights.w_down)
+
+    # ---- score weighting + masking, back to slot order ------------------
+    y = y.astype(jnp.float32) * sc[order][:, None]
+    in_group = jnp.arange(M) < jnp.sum(group_sizes)           # pad rows off
+    y = jnp.where((valid[order] & hosted[order] & in_group)[:, None], y, 0)
+    out = jnp.zeros((M, d), jnp.float32).at[order].set(y)
+    out = out.reshape(Sc, C, d).astype(tokens.dtype)
+    return out, ServeStats(miss=miss, served=jnp.sum(valid & hosted))

@@ -1,0 +1,87 @@
+"""Expert→server mapping: the service-discovery table (paper Fig. 6).
+
+The mapping is **runtime data, not program structure**: a (E, R) table of
+candidate server ranks per expert plus a (S,) liveness mask.  Failover, new
+server registration and load rebalancing all reduce to rewriting these arrays
+— no recompilation, no communication-group rebuild.  This is the TPU analogue
+of the paper's "client updates its local expert-to-server mapping mask".
+
+The host-side :class:`ExpertServerMap` mutates numpy copies; ``device_arrays``
+returns the jnp views fed to the jitted step.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ExpertServerMap:
+    """Host-side mutable view of the expert→server mapping."""
+
+    def __init__(self, mapping: np.ndarray, num_servers: int):
+        assert mapping.ndim == 2
+        self.table = np.asarray(mapping, np.int32)          # (E, R)
+        self.alive = np.ones((num_servers,), bool)
+        self.num_servers = num_servers
+
+    # ------------------------------------------------------------- control
+    def mark_dead(self, server: int) -> None:
+        self.alive[server] = False
+
+    def mark_alive(self, server: int) -> None:
+        self.alive[server] = True
+
+    def register_replica(self, expert: int, server: int) -> None:
+        """A new server announced it hosts `expert` (paper: registration)."""
+        row = self.table[expert]
+        free = np.where(row < 0)[0]
+        if len(free) == 0:
+            raise ValueError(f"replica table full for expert {expert}")
+        row[free[0]] = server
+
+    def drop_replica(self, expert: int, server: int) -> None:
+        row = self.table[expert]
+        row[row == server] = -1
+
+    def alive_replica_count(self) -> np.ndarray:
+        ok = (self.table >= 0) & self.alive[np.clip(self.table, 0, None)]
+        return ok.sum(axis=1)
+
+    # ------------------------------------------------------------- device
+    def device_arrays(self) -> Tuple[jax.Array, jax.Array]:
+        return jnp.asarray(self.table), jnp.asarray(self.alive)
+
+
+def default_mapping(num_experts: int, num_servers: int,
+                    max_replicas: int = 4) -> np.ndarray:
+    """Primary-only placement: expert e on server e // (E/S) (block layout)."""
+    table = np.full((num_experts, max_replicas), -1, np.int32)
+    per = num_experts // num_servers
+    assert per * num_servers == num_experts, (num_experts, num_servers)
+    table[:, 0] = np.arange(num_experts) // per
+    return table
+
+
+def lookup(table: jax.Array, alive: jax.Array, expert_ids: jax.Array,
+           salt: jax.Array) -> jax.Array:
+    """Pick an alive replica server per (token, k) routing decision.
+
+    table: (E, R) int32; alive: (S,) bool; expert_ids: (T, k) int32;
+    salt: (T, k) int32 (e.g. token index — spreads load across replicas).
+    Returns server ids (T, k) int32.  If every replica of an expert is dead
+    the token falls back to server 0 (counted upstream as a routing error —
+    the monitor repairs the table long before this can happen in practice).
+    """
+    cand = table[expert_ids]                                 # (T, k, R)
+    ok = (cand >= 0) & alive[jnp.clip(cand, 0, None)]        # (T, k, R)
+    cnt = ok.sum(axis=-1)                                    # (T, k)
+    pick = salt % jnp.maximum(cnt, 1)                        # (T, k)
+    prefix = jnp.cumsum(ok.astype(jnp.int32), axis=-1)       # 1-based rank
+    sel = ok & (prefix == (pick + 1)[..., None])
+    r = jnp.argmax(sel, axis=-1)                             # first match
+    server = jnp.take_along_axis(cand, r[..., None], axis=-1)[..., 0]
+    return jnp.where(cnt > 0, server, 0).astype(jnp.int32)

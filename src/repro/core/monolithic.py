@@ -1,0 +1,70 @@
+"""Monolithic baselines the paper compares against (§2.2, §5).
+
+* ``monolithic_ep`` — DeepEP-style expert parallelism: static expert→rank
+  placement inside one collective group, no service indirection, no replicas.
+  Structurally this is EAAS with a primary-only mapping — which is the point:
+  the paper's architecture strictly generalizes monolithic EP, so the
+  overhead of the indirection is measurable (EXPERIMENTS.md §Ablation), and
+  the baseline halts if any rank dies (`alive` is not consulted).
+* ``tp_moe`` — tensor-parallel MoE: every rank holds a 1/P slice of every
+  expert; no token exchange, but the model is replicated per 16-GPU unit,
+  which caps batch size (the paper's SGL-TP line).  In the CPU simulation
+  this is the S=1 local layer; the memory/batch consequences are modeled in
+  the serving engine.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import mapping as emap
+from repro.core.moe_layer import (MoERuntime, MoEStats, default_capacity,
+                                  eaas_moe_apply, init_eaas_moe)
+
+
+def monolithic_runtime(cfg: ModelConfig, num_servers: int,
+                       tokens_per_client: int,
+                       gemm_impl: str = "auto") -> MoERuntime:
+    """Primary-only mapping, liveness pinned alive (a dead rank = a hang)."""
+    from repro.core import expert_server
+    m = cfg.moe
+    table = emap.default_mapping(m.num_experts, num_servers, max_replicas=1)
+    local = expert_server.make_local_table(
+        m.num_experts, num_servers, np.zeros((num_servers, 0), np.int32))
+    return MoERuntime(
+        mapping=jnp.asarray(table),
+        alive=jnp.ones((num_servers,), bool),
+        local_table=jnp.asarray(local),
+        num_servers=num_servers,
+        capacity=default_capacity(tokens_per_client, m.top_k, num_servers,
+                                  m.capacity_factor),
+        gemm_impl=gemm_impl,
+    )
+
+
+def init_monolithic_ep(key, cfg: ModelConfig, num_servers: int) -> Dict:
+    return init_eaas_moe(key, cfg, num_servers, n_redundant=0)
+
+
+def monolithic_ep_apply(params: Dict, x: jax.Array, cfg: ModelConfig,
+                        runtime: MoERuntime, **kw
+                        ) -> Tuple[jax.Array, MoEStats]:
+    """Identical dataflow to EAAS minus indirection (R=1, no failover)."""
+    return eaas_moe_apply(params, x, cfg.moe, runtime,
+                          activation=cfg.activation, **kw)
+
+
+def init_tp_moe(key, cfg: ModelConfig) -> Dict:
+    # one logical server holding every expert (weights TP-sharded at launch)
+    return init_eaas_moe(key, cfg, num_servers=1, n_redundant=0)
+
+
+def tp_moe_apply(params: Dict, x: jax.Array, cfg: ModelConfig,
+                 gemm_impl: str = "auto") -> Tuple[jax.Array, MoEStats]:
+    rt = monolithic_runtime(cfg, 1, x.shape[0], gemm_impl)
+    return eaas_moe_apply(params, x, cfg.moe, rt, activation=cfg.activation)

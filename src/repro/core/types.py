@@ -1,0 +1,74 @@
+"""EAAS core datatypes: the shared-communication-buffer layout and dispatch
+records (paper §3.2).
+
+A buffer slot for one (client, server) pair is::
+
+    STATE   : uint8   0=EMPTY  1=CLIENT_WRITE_DONE  2=SERVER_DONE  3=OFFLINE
+    HEADER  : layer_id int32, count int32   (tokens valid in this slot)
+    PAYLOAD : hidden   (capacity, d_model)  token activations
+              expert_id(capacity,) int32    global expert id per token
+              score    (capacity,) fp32     router score per token
+
+In the SPMD in-graph path the STATE flag is replaced by data dependence and
+the HEADER/PAYLOAD ride a single all-to-all (DESIGN.md §2); the host-level
+engine (serving/engine.py) uses the literal flags via core/monitor.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Buffer protocol states (paper §3.2)
+STATE_EMPTY = 0
+STATE_CLIENT_WRITE_DONE = 1
+STATE_SERVER_DONE = 2
+STATE_OFFLINE = 3
+
+
+class RouterOutput(NamedTuple):
+    """Client-side gating result for T tokens."""
+
+    expert_ids: jax.Array      # (T, k) int32, global expert ids
+    scores: jax.Array          # (T, k) fp32, combination weights
+    full_probs: jax.Array      # (T, E) fp32 (for aux losses / stats)
+    aux_loss: jax.Array        # scalar fp32 load-balancing loss
+    z_loss: jax.Array          # scalar fp32 router z-loss
+
+
+class DispatchBuffers(NamedTuple):
+    """Client → server request buffers: one slot per destination server.
+
+    These ARE the paper's shared communication buffers: ``counts`` is the
+    header, the rest is the payload.  Leading dim = num_servers.
+    """
+
+    hidden: jax.Array          # (S, C, d) activations
+    expert_id: jax.Array       # (S, C) int32 global expert id (-1 = empty)
+    score: jax.Array           # (S, C) fp32
+    counts: jax.Array          # (S,) int32 header: valid tokens per slot
+    # --- client-side bookkeeping for the combine step -------------------
+    combine_slot: jax.Array    # (T, k) int32 flat index into (S*C) or -1
+    dropped: jax.Array         # scalar int32: tokens over capacity
+
+
+class ServeResult(NamedTuple):
+    """Server → client response buffers (mirrors DispatchBuffers layout)."""
+
+    hidden: jax.Array          # (S, C, d) score-weighted expert outputs
+
+
+class ExpertPlacement(NamedTuple):
+    """Static per-deployment placement (from load_balance.plan).
+
+    ``primary_owner[e]``   server rank owning expert e's primary copy
+    ``redundant_table``    (S, n_red) int32 global expert id per redundant
+                           slot (-1 = unused slot)
+    ``mapping``            (E, R) int32 candidate server per replica (-1 pad)
+    """
+
+    primary_owner: jax.Array
+    redundant_table: jax.Array
+    mapping: jax.Array

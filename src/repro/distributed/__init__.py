@@ -1,0 +1,3 @@
+"""Distribution layer: sharding rules and collective helpers."""
+
+from repro.distributed.sharding_rules import param_shardings, batch_shardings  # noqa: F401

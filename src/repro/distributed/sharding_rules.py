@@ -1,0 +1,161 @@
+"""Sharding rules: parameter/batch PartitionSpecs per (arch family, phase).
+
+Mesh axes: ``("pod",) data, model``.  Phases:
+
+* ``serve``  — dense weights tensor-parallel over ``model``; replicated over
+  data rows (each row is an independent client group); expert banks sharded
+  over ``model`` (the 16 logical servers), *replicated over data* — the
+  replica pool that failover and load balancing draw from.
+* ``train``  — same TP layout + ZeRO-3: the non-server dim of every large
+  tensor is additionally sharded over ``data`` and all-gathered at use
+  (XLA inserts the gathers at the shard_map island / einsum boundaries).
+  Optimizer state inherits the parameter specs (sharded state = ZeRO-1/2).
+
+Specs are matched by parameter *path suffix*; stacked scan dimensions
+(leading layer dims) are padded with ``None`` automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _path_of(key_path) -> str:
+    parts = []
+    for p in key_path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# core-dim specs: (serve, train, decode) per matcher, applied to TRAILING
+# dims.  The decode phase replicates attention projections over the model
+# axis: the KV cache is sequence-sharded there (flash-decode SP islands), so
+# every rank computes the tiny one-token q/k/v redundantly instead of
+# re-sharding a multi-GB cache every layer (EXPERIMENTS.md §Perf iter 1).
+def _rules(dp: str, mp: str):
+    # column-parallel (in, out): out over model; ZeRO-3 shards `in` over data
+    col = (P(None, mp), P(dp, mp), P(None, mp))
+    # row-parallel (in, out=d): in over model
+    row = (P(mp, None), P(mp, dp), P(mp, None))
+    repl2 = (P(None, None), P(None, None), P(None, None))
+    # attention projections: TP for train/prefill, replicated for decode
+    att_col = (P(None, mp), P(dp, mp), P(None, None))
+    att_row = (P(mp, None), P(mp, dp), P(None, None))
+    expert = (P(mp, None, None, None), P(mp, None, dp, None),
+              P(mp, None, None, None))
+    return [
+        # --- embeddings / head ------------------------------------------
+        ("embed",        2, (P(mp, None), P(mp, dp), P(mp, None))),
+        ("head",         2, col),
+        # --- expert service tier (dims: S, L, d|f, f|d) ------------------
+        ("servers/w_gate", 4, expert),
+        ("servers/w_up",   4, expert),
+        ("servers/w_down", 4, expert),
+        ("servers/local_table", 2, (P(mp, None),) * 3),
+        ("w_router",     2, repl2),
+        # --- attention ----------------------------------------------------
+        ("wq",           2, att_col), ("wk", 2, att_col),
+        ("wv",           2, att_col), ("wo", 2, att_row),
+        # --- dense / shared / residual FFN --------------------------------
+        ("w_gate",       2, col), ("w_up", 2, col), ("w_down", 2, row),
+        # --- mamba ---------------------------------------------------------
+        ("in_proj",      2, col), ("out_proj", 2, row),
+        ("conv_w",       2, (P(None, mp),) * 3),
+        # --- rwkv (matches the explicit Megatron island in models/rwkv) ---
+        ("cmix/w_r",     2, repl2),
+        ("w_r",          2, col), ("w_k", 2, col), ("w_v", 2, row),
+        ("w_g",          2, col), ("w_o", 2, row),
+        ("decay_A",      2, repl2),
+        ("decay_B",      2, col),
+        ("decay_w0",     1, (P(mp), P(mp), P(mp))),
+        ("bonus_u",      2, (P(mp, None),) * 3),
+        ("tmix/ln_scale", 1, (P(mp), P(mp), P(mp))),
+    ]
+
+
+# ``train_tp``: sub-~100B archs train with the serve-style TP layout
+# (weights replicated over data; classic DP gradient all-reduce) — ZeRO-3's
+# per-layer gather/scatter traffic only pays for itself when parameters
+# cannot fit replicated-over-data (EXPERIMENTS.md §Perf iter 2).
+_PHASE_IDX = {"serve": 0, "train": 1, "decode": 2, "train_tp": 0}
+
+
+def train_phase_for(total_params: int, model_parallel: int = 16,
+                    budget_bytes: int = 4 * 2**30) -> str:
+    """ZeRO-3 only when bf16 params + grads per chip exceed the budget."""
+    per_chip = 2 * 2 * total_params // model_parallel   # weights + grads
+    return "train" if per_chip > budget_bytes else "train_tp"
+
+
+def _match(path: str, shape, phase: str, dp: str, mp: str) -> P:
+    idx = _PHASE_IDX[phase]
+    for suffix, core_ndim, specs in _rules(dp, mp):
+        if path.endswith(suffix) and len(shape) >= core_ndim:
+            spec = specs[idx]
+            pad = len(shape) - core_ndim
+            return P(*([None] * pad), *spec)
+    return P()                                   # replicate (norms, scalars)
+
+
+def param_shardings(params_abstract, mesh, phase: str = "serve",
+                    dp="data", mp: str = "model"):
+    """PartitionSpec pytree matching ``params_abstract`` (shapes pytree).
+
+    ``dp`` may be an axis name or a tuple of axis names (multi-pod: the
+    batch/FSDP dim shards over ("pod", "data") jointly).
+    """
+    dp = tuple(dp) if isinstance(dp, (tuple, list)) else dp
+    def one(key_path, leaf):
+        return _match(_path_of(key_path), leaf.shape, phase, dp, mp)
+    return jax.tree_util.tree_map_with_path(one, params_abstract)
+
+
+def adafactor_state_shardings(params_abstract, pspecs):
+    """Specs for Adafactor factored state: vr drops the last param dim,
+    vc drops the second-to-last — each inherits the surviving dims' spec
+    (so trillion-param factor vectors stay sharded, not replicated)."""
+    def one(leaf, spec):
+        nd = len(leaf.shape)
+        full = list(spec) + [None] * (nd - len(spec))
+        if nd >= 2:
+            return {"vr": P(*full[:-1]), "vc": P(*full[:-2], full[-1])}
+        return {"v": P(*full)}
+    tree = jax.tree.map(one, params_abstract, pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+    # params_abstract is the outer structure; `one` ran on (leaf, spec) pairs
+    return {"f": tree}
+
+
+def to_named(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(mesh, dp_axes: Tuple[str, ...]):
+    """tokens/labels (B, S): batch over the data axes."""
+    return NamedSharding(mesh, P(dp_axes, None))
+
+
+def cache_shardings(mesh, dp_axes: Tuple[str, ...], *,
+                    seq_shard: bool = False):
+    """KV caches: (layers?, B, slots, KV, hd).
+
+    Default: batch over data.  ``seq_shard=True`` (long-context, batch 1):
+    slots over data instead (sequence parallelism).
+    """
+    if seq_shard:
+        return P(None, dp_axes, None, None)       # applied to trailing 4 dims
+    return P(dp_axes, None, None, None)

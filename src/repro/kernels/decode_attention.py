@@ -1,0 +1,101 @@
+"""Pallas TPU flash-decode kernel: one-token GQA attention over a KV cache.
+
+The attention client's hot loop during decoding.  Online-softmax over KV
+blocks; grid = (batch, kv_heads, seq_blocks) with the sequence dimension
+innermost so the (G, hd) accumulator lives in VMEM scratch across blocks.
+Sequence lengths arrive via scalar prefetch; padded cache slots are masked.
+
+VMEM per step: TS·hd (k) + TS·hd (v) + G·hd (q) + G·hd·4 (acc) — for
+TS=512, hd=128, G=8: ~0.5 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(lengths, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, ts: int, n_s: int, scale: float):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (TS, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (TS, hd)
+
+    span = s * ts + jax.lax.broadcasted_iota(jnp.int32, (1, ts), 1)
+    valid = span < lengths[b]                            # (1, TS)
+
+    scores = (q @ k.T) * scale                           # (G, TS)
+    scores = jnp.where(valid, scores, NEG)
+
+    m_prev = m_ref[...]                                  # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+    # explicit mask: a fully-invalid block must contribute nothing
+    p = jnp.where(valid, jnp.exp(scores - m_new), 0.0)   # (G, TS)
+    alpha = jnp.exp(m_prev - m_new)                      # (G, 1)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                        lengths: jax.Array, *, ts: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k/v_cache: (B, S, KV, hd); lengths: (B,) >= 1.
+
+    Returns (B, H, hd).  S must be a multiple of ts.
+    """
+    B, H, hd = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    assert G * KV == H and S % ts == 0, (H, KV, S, ts)
+    qg = q.reshape(B, KV, G, hd)
+
+    n_s = S // ts
+    kernel = functools.partial(_kernel, ts=ts, n_s=n_s,
+                               scale=1.0 / np.sqrt(hd))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, KV, n_s),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd), lambda b, kv, s, L: (b, kv, 0, 0)),
+                pl.BlockSpec((1, ts, 1, hd), lambda b, kv, s, L: (b, s, kv, 0)),
+                pl.BlockSpec((1, ts, 1, hd), lambda b, kv, s, L: (b, s, kv, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd),
+                                   lambda b, kv, s, L: (b, kv, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, hd), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,138 @@
+"""Jit-ready wrappers around the Pallas kernels with CPU-friendly lowerings.
+
+Every op has several implementations:
+
+* ``pallas`` / ``pallas_interpret`` — the TPU kernel (interpret=True runs the
+  kernel body in Python on CPU; used by the allclose tests).
+* ``xla_ragged`` — ``jax.lax.ragged_dot``: exact, executes fast on CPU; its
+  HLO flop count on CPU over-counts by G× (XLA decomposes into masked dots),
+  so it is NOT used for the roofline dry-run.
+* ``xla_dense`` — per-expert-capacity batched matmul (GShard-style): the
+  flop-honest XLA lowering used by the dry-run; FLOPs = 2·L·cap·d·f which at
+  the configured capacity factor equals the ideal grouped-GEMM work.
+* ``ref`` — the oracle from :mod:`repro.kernels.ref`.
+
+``set_default_impl`` lets the launch layer pick one globally (the dry-run
+sets ``xla_dense``; tests pin impls explicitly).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels.combine import combine_weighted_pallas
+from repro.kernels.decode_attention import flash_decode_pallas
+from repro.kernels.grouped_gemm import grouped_gemm_pallas
+
+_DEFAULT_IMPL: Optional[str] = None
+
+
+def set_default_impl(impl: Optional[str]) -> None:
+    global _DEFAULT_IMPL
+    _DEFAULT_IMPL = impl
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        if _DEFAULT_IMPL is not None:
+            return _DEFAULT_IMPL
+        return "pallas" if _on_tpu() else "xla_ragged"
+    return impl
+
+
+# --------------------------------------------------------------- grouped gemm
+
+def grouped_gemm_dense(x_sorted: jax.Array, w: jax.Array,
+                       group_sizes: jax.Array, capacity: int) -> jax.Array:
+    """GShard-style per-expert-capacity batched matmul.
+
+    Scatters the group-sorted rows into (G, capacity, K), one batched matmul
+    per weight, gathers back.  Rows beyond an expert's capacity are dropped
+    (the launch layer sizes ``capacity`` from the dispatch capacity factor so
+    this only triggers under extreme imbalance).
+    """
+    M, K = x_sorted.shape
+    G, _, N = w.shape
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes).astype(jnp.int32)])
+    rows = jnp.arange(M, dtype=jnp.int32)
+    gid = jnp.searchsorted(offsets[1:], rows, side="right").astype(jnp.int32)
+    live = rows < offsets[-1]
+    gid_c = jnp.minimum(gid, G - 1)
+    pos = rows - offsets[gid_c]
+    ok = live & (pos < capacity)
+    idx = jnp.where(ok, gid_c * capacity + pos, G * capacity)
+    xg = jnp.zeros((G * capacity, K), x_sorted.dtype).at[idx].set(
+        x_sorted, mode="drop").reshape(G, capacity, K)
+    yg = jnp.einsum("gck,gkn->gcn", xg, w,
+                    preferred_element_type=jnp.float32)
+    y = yg.reshape(G * capacity, N)
+    safe = jnp.minimum(idx, G * capacity - 1)
+    out = jnp.where(ok[:, None], y[safe], 0)
+    return out.astype(x_sorted.dtype)
+
+
+def grouped_gemm(x_sorted: jax.Array, w: jax.Array, group_sizes: jax.Array,
+                 *, impl: str = "auto", expert_capacity: Optional[int] = None,
+                 tm: int = 128, tn: int = 128, tk: int = 128) -> jax.Array:
+    """out[i] = x_sorted[i] @ w[g(i)] — see module docstring for impls."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return kref.grouped_gemm_ref(x_sorted, w, group_sizes)
+    if impl == "xla_ragged":
+        y = jax.lax.ragged_dot(x_sorted, w, group_sizes.astype(jnp.int32))
+        # ragged_dot leaves rows past sum(group_sizes) unspecified: mask them
+        live = jnp.arange(x_sorted.shape[0]) < jnp.sum(group_sizes)
+        return jnp.where(live[:, None], y, 0).astype(x_sorted.dtype)
+    if impl == "xla_dense":
+        M, G = x_sorted.shape[0], w.shape[0]
+        cap = expert_capacity or max(_ceil_mult(2 * M // max(G, 1) + 1, 8), 8)
+        return grouped_gemm_dense(x_sorted, w, group_sizes, cap)
+    if impl in ("pallas", "pallas_interpret"):
+        return grouped_gemm_pallas(
+            x_sorted, w, group_sizes, tm=tm, tn=tn, tk=tk,
+            interpret=(impl == "pallas_interpret"))
+    raise ValueError(f"unknown grouped_gemm impl {impl!r}")
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# --------------------------------------------------------------- flash decode
+
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 lengths: jax.Array, *, impl: str = "auto",
+                 ts: int = 512) -> jax.Array:
+    impl = _resolve(impl)
+    if impl in ("ref", "xla_ragged", "xla_dense"):
+        return kref.flash_decode_ref(q, k_cache, v_cache, lengths)
+    if impl in ("pallas", "pallas_interpret"):
+        return flash_decode_pallas(q, k_cache, v_cache, lengths, ts=ts,
+                                   interpret=(impl == "pallas_interpret"))
+    raise ValueError(f"unknown flash_decode impl {impl!r}")
+
+
+# -------------------------------------------------------------------- combine
+
+def combine_weighted(x: jax.Array, w: jax.Array, *, impl: str = "auto",
+                     tt: int = 128, td: int = 512) -> jax.Array:
+    impl = _resolve(impl)
+    if impl in ("ref", "xla_ragged", "xla_dense"):
+        return kref.combine_weighted_ref(x, w)
+    if impl in ("pallas", "pallas_interpret"):
+        return combine_weighted_pallas(x, w, tt=tt, td=td,
+                                       interpret=(impl == "pallas_interpret"))
+    raise ValueError(f"unknown combine impl {impl!r}")

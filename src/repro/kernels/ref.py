@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` of DESIGN.md §6).
+
+These are written for *obvious correctness*, not speed; the test suite sweeps
+shapes/dtypes and asserts the kernels (interpret mode) match these exactly
+(up to accumulation-order tolerance).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def grouped_gemm_ref(x: jax.Array, w: jax.Array,
+                     group_sizes: jax.Array) -> jax.Array:
+    """Row-grouped matmul oracle.
+
+    x: (M, K) tokens sorted by group; w: (G, K, N); group_sizes: (G,) with
+    sum(group_sizes) <= M.  Row i belongs to group g iff
+    offsets[g] <= i < offsets[g+1].  Rows beyond sum(group_sizes) (padding)
+    produce zeros.
+    Implementation: G masked dense matmuls — exact and trivially correct.
+    """
+    M = x.shape[0]
+    G = w.shape[0]
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), group_sizes.dtype), jnp.cumsum(group_sizes)])
+    rows = jnp.arange(M)
+    out = jnp.zeros((M, w.shape[2]), jnp.float32)
+    for g in range(G):
+        mask = (rows >= offsets[g]) & (rows < offsets[g + 1])
+        xg = jnp.where(mask[:, None], x, 0)
+        out = out + (xg.astype(jnp.float32) @ w[g].astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def flash_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array) -> jax.Array:
+    """Single-token GQA attention oracle.
+
+    q: (B, H, hd); k_cache/v_cache: (B, S, KV, hd); lengths: (B,) >= 1.
+    Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qf = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qf, kf) / np.sqrt(hd)
+    mask = (jnp.arange(k_cache.shape[1])[None, :] < lengths[:, None])
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, vf)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def combine_weighted_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Fused top-k combine oracle: x (T, k, d), w (T, k) -> (T, d)."""
+    return jnp.einsum("tkd,tk->td", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

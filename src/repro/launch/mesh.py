@@ -1,0 +1,32 @@
+"""Production mesh definitions.
+
+A FUNCTION, not a module constant — importing this module never touches JAX
+device state (the dry-run pins the fake device count before any jax import).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips for the multi-pod run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Batch axes of a production mesh (everything but 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for SPMD tests (requires forced host device count)."""
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,66 @@
+"""Serving launcher: the EAAS engine on a selectable architecture.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --arch kimi-k2-1t-a32b \
+        --reduced --requests 12 [--mode eaas|monolithic_ep|tp] \
+        [--fail-at 12:1] [--servers 4]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving import EngineConfig, Request, SamplingParams, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-r1")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mode", default="eaas",
+                    choices=["eaas", "monolithic_ep", "tp"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--servers", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--fail-at", default=None,
+                    help="step:rank — inject a server failure")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced or jax.default_backend() == "cpu":
+        cfg = cfg.reduced()
+
+    ecfg = EngineConfig(mode=args.mode, num_servers=args.servers,
+                        max_batch=args.max_batch, max_seq=96,
+                        n_redundant=2,
+                        tp_batch_cap=max(args.max_batch // 2, 1))
+    eng = ServingEngine(cfg, ecfg, seed=0)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(Request(
+            i, rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
+            SamplingParams(max_new_tokens=args.max_new)))
+
+    fail = None
+    if args.fail_at:
+        step_s, rank_s = args.fail_at.split(":")
+        fail = (int(step_s), int(rank_s))
+
+    def on_step(e):
+        if fail and e.step_idx == fail[0]:
+            print(f"[t={e.clock:.2f}s] injecting failure of server {fail[1]}")
+            e.inject_server_failure(fail[1])
+
+    m = eng.run(max_steps=5000, on_step=on_step)
+    print("\n=== summary ===")
+    for k, v in m.summary().items():
+        print(f"  {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Training launcher.
+
+CPU-scale runs execute directly (reduced configs, real training with
+checkpointing).  For pod-scale runs this assembles the same jitted
+``train_step`` the dry-run compiles (mesh, shardings, Adafactor, remat,
+ZeRO-3) — on TPU hosts it executes; in this container use
+``repro.launch.dryrun`` to verify the compiled artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --reduced --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+from repro.configs import get_config
+from repro.core.moe_layer import default_runtime
+from repro.models.transformer import ParallelCtx, build_model
+from repro.training.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.training.data import synthetic_lm_batches
+from repro.training.optimizer import adamw, cosine_schedule
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale config (required in this container)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    elif jax.default_backend() == "cpu":
+        raise SystemExit(
+            "full configs need a TPU pod; use --reduced on CPU, or "
+            "python -m repro.launch.dryrun to verify the pod compilation")
+
+    S = 2 if cfg.moe else 1
+    model = build_model(cfg, num_servers=S)
+    rt = (default_runtime(cfg, S, args.batch * args.seq,
+                          gemm_impl="xla_ragged") if cfg.moe else None)
+    ctx = ParallelCtx(remat=False, moe_runtime=rt,
+                      ce_chunk=min(64, args.seq))
+    opt = adamw(lr=cosine_schedule(args.lr, warmup=10, total=args.steps))
+    data = synthetic_lm_batches(cfg, args.batch, args.seq, seed=0)
+
+    state = init_train_state(model, opt, jax.random.PRNGKey(0),
+                             compression=args.compress_grads)
+    start = 0
+    ck = None
+    if args.ckpt_dir:
+        ck = AsyncCheckpointer(args.ckpt_dir)
+        if args.resume and latest_step(args.ckpt_dir) is not None:
+            state, start = restore_checkpoint(args.ckpt_dir, state)
+            print(f"resumed at step {start}")
+
+    step = jax.jit(make_train_step(model, opt, ctx,
+                                   compression=args.compress_grads))
+    for i in range(start, args.steps):
+        state, m = step(state, next(data))
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:5d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['grad_norm']):.3f}")
+        if ck and (i + 1) % 20 == 0:
+            ck.save(i + 1, state)
+    if ck:
+        ck.wait()
+
+
+if __name__ == "__main__":
+    main()

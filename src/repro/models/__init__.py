@@ -1,0 +1,16 @@
+"""Model substrate: every assigned architecture family, in pure JAX.
+
+The public entrypoint is :func:`repro.models.transformer.build_model`, which
+returns a :class:`Model` bundle of ``init / train_forward / prefill / decode``
+functions for any registered :class:`~repro.configs.base.ModelConfig`.
+
+(The re-export is lazy: repro.core's modules import repro.models.common, and
+transformer imports repro.core — a direct import here would be circular.)
+"""
+
+
+def __getattr__(name):
+    if name in ("Model", "build_model", "ParallelCtx"):
+        from repro.models import transformer
+        return getattr(transformer, name)
+    raise AttributeError(name)

@@ -1,0 +1,96 @@
+"""Shared building blocks: norms, embeddings, initializers, dtype policy."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def resolve_dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------------
+# Initializers.  All weights are created in the config dtype (bf16 for every
+# production config); norm scales in fp32.
+# --------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    """Truncated-normal fan-in init (matches common LLM pretraining inits)."""
+    std = 1.0 / np.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -3, 3, (in_dim, out_dim), jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm_init(dim: int) -> jax.Array:
+    return jnp.ones((dim,), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Norms — computed in fp32, cast back to input dtype.
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * scale
+    return y.astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return y.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Activations
+# --------------------------------------------------------------------------
+
+def activation_fn(name: str):
+    if name == "swiglu":  # handled structurally in mlp.py; gate act is silu
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu_sq":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    """Gemma-style logit soft-capping."""
+    return cap * jnp.tanh(logits / cap)
+
+
+# --------------------------------------------------------------------------
+# Small helpers
+# --------------------------------------------------------------------------
+
+def count_params(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(int(np.prod(p.shape)) * p.dtype.itemsize
+               for p in jax.tree.leaves(params))
+
+
+def assert_finite(tree, name: str = "tree"):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if not bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))):
+            raise FloatingPointError(f"non-finite values in {name}{path}")

@@ -1,0 +1,100 @@
+"""KV caches and recurrent states for serving.
+
+:class:`KVCache` — per-layer (batch, slots, kv_heads, head_dim) buffers with
+a per-sequence length counter.  Sliding-window layers allocate only
+``window`` slots and write round-robin.  ``window`` is a *static* pytree
+field so stacked caches can ride ``lax.scan`` over layers.
+
+All update ops are functional (return a new cache) so they can live inside
+jitted ``serve_step``s and be donated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class KVCache:
+    """One layer's cache.  k/v: (batch, slots, kv_heads, head_dim)."""
+
+    k: jax.Array
+    v: jax.Array
+    # number of tokens already written per sequence: (batch,) int32
+    length: jax.Array
+    # ring buffer (sliding window) if window > 0, else linear — STATIC
+    window: int = field(default=0, metadata=dict(static=True))
+
+
+def init_kv_cache(batch: int, max_seq: int, kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16, window: int = 0) -> KVCache:
+    slots = min(window, max_seq) if window else max_seq
+    return KVCache(
+        k=jnp.zeros((batch, slots, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, slots, kv_heads, head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+        window=window,
+    )
+
+
+def kv_cache_spec(batch: int, max_seq: int, kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16, window: int = 0) -> KVCache:
+    """ShapeDtypeStruct twin of :func:`init_kv_cache` (for the dry-run)."""
+    slots = min(window, max_seq) if window else max_seq
+    sds = jax.ShapeDtypeStruct
+    return KVCache(
+        k=sds((batch, slots, kv_heads, head_dim), dtype),
+        v=sds((batch, slots, kv_heads, head_dim), dtype),
+        length=sds((batch,), jnp.int32),
+        window=window,
+    )
+
+
+def append_decode(cache: KVCache, k_new: jax.Array, v_new: jax.Array) -> KVCache:
+    """Append ONE token per sequence.  k_new/v_new: (batch, 1, kv_heads, hd).
+
+    Implemented as a vmapped dynamic-update-slice (not a gather-scatter):
+    GSPMD keeps the batch dim partitioned through DUS, whereas the explicit-
+    index scatter forced an all-gather of the cache every layer.
+    """
+    slots = cache.k.shape[1]
+    idx = cache.length % slots if cache.window else cache.length
+
+    def upd(c, new, i):                  # (slots, KV, hd), (KV, hd), scalar
+        return jax.lax.dynamic_update_slice_in_dim(c, new[None], i, axis=0)
+
+    k = jax.vmap(upd)(cache.k, k_new[:, 0], idx)
+    v = jax.vmap(upd)(cache.v, v_new[:, 0], idx)
+    return KVCache(k=k, v=v, length=cache.length + 1, window=cache.window)
+
+
+def write_prefill(cache: KVCache, k: jax.Array, v: jax.Array) -> KVCache:
+    """Write a full prompt (batch, seq, kv_heads, hd) starting at position 0."""
+    seq = k.shape[1]
+    slots = cache.k.shape[1]
+    if cache.window and seq > slots:
+        # only the trailing `window` tokens are retained; keep ring phase
+        k_tail, v_tail = k[:, -slots:], v[:, -slots:]
+        pos = (jnp.arange(seq - slots, seq) % slots)
+        ck = cache.k.at[:, pos].set(k_tail)
+        cv = cache.v.at[:, pos].set(v_tail)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)
+    length = jnp.full_like(cache.length, seq)
+    return KVCache(k=ck, v=cv, length=length, window=cache.window)
+
+
+def valid_mask(cache: KVCache) -> jax.Array:
+    """(batch, slots) bool — which cache slots hold valid tokens."""
+    slots = cache.k.shape[1]
+    pos = jnp.arange(slots)[None, :]
+    if cache.window:
+        n_valid = jnp.minimum(cache.length, slots)[:, None]
+        return pos < jnp.broadcast_to(n_valid, (cache.k.shape[0], slots))
+    return pos < cache.length[:, None]

@@ -1,0 +1,208 @@
+"""Mamba2 block (zamba2 backbone) — chunked SSD, exact.
+
+State-space recurrence per head (scalar decay, Mamba2 restriction):
+
+    S_t = a_t · S_{t-1} + u_t ⊗ B_t          S: (P, N)
+    y_t = S_t · C_t                           y: (P,)
+
+with a_t = exp(dt_t · A), u_t = dt_t · x_t.  Training/prefill uses the
+chunked form (intra-chunk quadratic + inter-chunk scan) so the sequential
+dimension is seq/Q, not seq; decode is the one-step recurrence.  The
+chunked path is property-tested against the naive per-step scan.
+
+Simplifications vs. the reference CUDA implementation (noted per DESIGN.md):
+ngroups=1 (B/C shared across heads) and the short conv applies to x only.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rms_norm
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array      # (B, H, P, N) fp32
+    conv: jax.Array     # (B, K-1, d_inner) — trailing conv inputs
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    heads = d_inner // s.head_dim        # derived: heads × head_dim = d_inner
+    return d_inner, heads, s.head_dim, s.d_state
+
+
+def init_mamba(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    d_inner, H, P, N = dims(cfg)
+    s = cfg.ssm
+    dt_proj = 2 * d_inner + 2 * N + H          # z, x, B, C, dt
+    ks = jax.random.split(key, 4)
+    dt_wide = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "in_proj": dense_init(ks[0], d, dt_proj, dt_wide),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, d_inner), jnp.float32)
+                   * 0.1).astype(dt_wide),
+        "A_log": jnp.zeros((H,), jnp.float32),            # A = -exp(A_log)
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),  # gated RMSNorm
+        "out_proj": dense_init(ks[2], d_inner, d, dt_wide),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_inner, H, P, N = dims(cfg)
+    z, x, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    return z, x, Bm, Cm, dt
+
+
+def _conv(x: jax.Array, w: jax.Array, state: jax.Array = None):
+    """Causal depthwise conv over time.  x: (B, L, D); w: (K, D)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _ssd_chunked(u, logA, Bm, Cm, S0, chunk: int):
+    """Exact chunked SSD scan.
+
+    u: (B, L, H, P) dt-scaled inputs; logA: (B, L, H) per-step log decay;
+    Bm/Cm: (B, L, N); S0: (B, H, P, N).
+    Returns y (B, L, H, P), final state.
+    """
+    Bsz, L, H, P = u.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    while L % Q:
+        Q -= 1
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    u = u.reshape(Bsz, nc, Q, H, P)
+    la = logA.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    def per_chunk(S, inp):
+        uq, laq, bq, cq = inp                     # (B,Q,H,P),(B,Q,H),(B,Q,N)
+        cum = jnp.cumsum(laq, axis=1)             # inclusive (B,Q,H)
+        # intra-chunk: y_t += sum_{j<=t} exp(cum_t - cum_j) (C_t·B_j) u_j
+        G = jnp.einsum("bqn,bjn->bqj", cq, bq)    # (B,Q,Q)
+        Mlog = cum[:, :, None, :] - cum[:, None, :, :]   # (B,Q,Q,H)
+        tri = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+        M = jnp.where(tri[None, :, :, None], jnp.exp(Mlog), 0.0)
+        y_intra = jnp.einsum("bqj,bqjh,bjhp->bqhp", G, M, uq)
+        # inter-chunk: y_t += exp(cum_t) C_t · S0
+        y_inter = jnp.einsum("bqh,bqn,bhpn->bqhp", jnp.exp(cum), cq, S)
+        # next state: S' = exp(cum_Q) S + sum_j exp(cum_Q - cum_j) u_j ⊗ B_j
+        wj = jnp.exp(cum[:, -1:, :] - cum)        # (B,Q,H)
+        S_new = (jnp.exp(cum[:, -1, :])[:, :, None, None] * S +
+                 jnp.einsum("bqh,bqhp,bqn->bhpn", wj, uq, bq))
+        return S_new, y_intra + y_inter
+
+    inputs = (u.swapaxes(0, 1), la.swapaxes(0, 1),
+              Bc.swapaxes(0, 1), Cc.swapaxes(0, 1))
+    S_final, ys = jax.lax.scan(
+        jax.checkpoint(per_chunk), S0.astype(jnp.float32), inputs)
+    y = ys.swapaxes(0, 1).reshape(Bsz, L, H, P)
+    return y, S_final
+
+
+def _ssd_scan_ref(u, logA, Bm, Cm, S0):
+    """Naive per-step scan (the oracle for the chunked path)."""
+    def step(S, inp):
+        ut, lat, bt, ct = inp
+        S = jnp.exp(lat)[:, :, None, None] * S + jnp.einsum(
+            "bhp,bn->bhpn", ut, bt)
+        y = jnp.einsum("bhpn,bn->bhp", S, ct)
+        return S, y
+    inputs = (u.swapaxes(0, 1), logA.swapaxes(0, 1),
+              Bm.swapaxes(0, 1), Cm.swapaxes(0, 1))
+    S, ys = jax.lax.scan(step, S0.astype(jnp.float32), inputs)
+    return ys.swapaxes(0, 1), S
+
+
+def mamba_forward(params: Dict, cfg: ModelConfig, x: jax.Array,
+                  state: MambaState = None, *, chunk: int = 64,
+                  use_ref_scan: bool = False
+                  ) -> Tuple[jax.Array, MambaState]:
+    """Full-sequence forward (train / prefill).  x: (B, L, d_model)."""
+    Bsz, L, d = x.shape
+    d_inner, H, P, N = dims(cfg)
+    proj = x @ params["in_proj"]
+    z, xs, Bm, Cm, dt = _split_proj(cfg, proj)
+
+    conv_state = None if state is None else state.conv
+    xs, conv_state = _conv(xs, params["conv_w"], conv_state)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,L,H)
+    A = -jnp.exp(params["A_log"])                                     # (H,)
+    logA = dt * A
+    xh = xs.reshape(Bsz, L, H, P).astype(jnp.float32)
+    u = xh * dt[..., None]
+
+    S0 = (jnp.zeros((Bsz, H, P, N), jnp.float32)
+          if state is None else state.ssm)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    if use_ref_scan:
+        y, S = _ssd_scan_ref(u, logA, Bf, Cf, S0)
+    else:
+        y, S = _ssd_chunked(u, logA, Bf, Cf, S0, chunk)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(Bsz, L, d_inner)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), params["norm_scale"], cfg.rms_norm_eps)
+    out = y @ params["out_proj"]
+    return out, MambaState(ssm=S, conv=conv_state)
+
+
+def mamba_decode(params: Dict, cfg: ModelConfig, x: jax.Array,
+                 state: MambaState) -> Tuple[jax.Array, MambaState]:
+    """One-token decode.  x: (B, 1, d_model)."""
+    Bsz, _, d = x.shape
+    d_inner, H, P, N = dims(cfg)
+    proj = x @ params["in_proj"]
+    z, xs, Bm, Cm, dt = _split_proj(cfg, proj)
+
+    xs, conv_state = _conv(xs, params["conv_w"], state.conv)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)                                    # (B,H)
+    xh = xs.reshape(Bsz, H, P).astype(jnp.float32)
+    u = xh * dt[..., None]
+
+    S = (a[:, :, None, None] * state.ssm +
+         jnp.einsum("bhp,bn->bhpn", u, Bm[:, 0].astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", S, Cm[:, 0].astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(Bsz, 1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), params["norm_scale"], cfg.rms_norm_eps)
+    return y @ params["out_proj"], MambaState(ssm=S, conv=conv_state)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> MambaState:
+    d_inner, H, P, N = dims(cfg)
+    K = cfg.ssm.d_conv
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return MambaState(
+        ssm=jnp.zeros((batch, H, P, N), jnp.float32),
+        conv=jnp.zeros((batch, K - 1, d_inner), dt),
+    )

@@ -1,0 +1,38 @@
+"""Dense FFN blocks (SwiGLU / GeLU / squared-ReLU)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation_fn, dense_init
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype) -> Dict:
+    ks = jax.random.split(key, 3)
+    if activation == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[1], d_ff, d_model, dtype),
+    }
+
+
+def mlp(params: Dict, x: jax.Array, activation: str) -> jax.Array:
+    if activation == "swiglu":
+        g = jax.nn.silu(x @ params["w_gate"])
+        return (g * (x @ params["w_up"])) @ params["w_down"]
+    act = activation_fn(activation)
+    return act(x @ params["w_up"]) @ params["w_down"]
+
+
+def init_mlp_for(key, cfg: ModelConfig) -> Dict:
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return init_mlp(key, cfg.d_model, cfg.d_ff, cfg.activation, dt)

@@ -1,0 +1,280 @@
+"""RWKV-6 "Finch" block (rwkv6-7b): attention-free time-mix with
+data-dependent decay + squared-ReLU channel-mix.
+
+Per head (key dim D = value dim D), state S: (D, D):
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t ⊗ v_t)
+    S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+
+with the Finch signature: w_t = exp(-exp(w0 + tanh(x_w A) B)) is a
+*data-dependent* per-channel decay.  Training/prefill runs a chunk-
+checkpointed scan (outer scan over chunks, inner steps rematerialized) so
+backward memory is O(L/chunk · state) instead of O(L · state).
+
+Simplification vs. reference: the token-shift mix coefficients are static
+(full Finch low-rank-interpolates them); noted in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rms_norm
+
+
+class RwkvState(NamedTuple):
+    wkv: jax.Array       # (B, H, D, D) fp32
+    shift_tmix: jax.Array  # (B, d) last token seen by time-mix
+    shift_cmix: jax.Array  # (B, d) last token seen by channel-mix
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int]:
+    D = cfg.ssm.head_dim if cfg.ssm else cfg.head_dim
+    H = cfg.d_model // D
+    return H, D
+
+
+def init_rwkv_tmix(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    H, D = dims(cfg)
+    lora = max(32, d // 64)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ks = jax.random.split(key, 8)
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(
+            jnp.float32),                       # r,k,v,w,g shift mixes
+        "w_r": dense_init(ks[1], d, d, dt),
+        "w_k": dense_init(ks[2], d, d, dt),
+        "w_v": dense_init(ks[3], d, d, dt),
+        "w_g": dense_init(ks[4], d, d, dt),
+        "w_o": dense_init(ks[5], d, d, dt),
+        "decay_w0": jnp.full((d,), -6.0, jnp.float32),
+        "decay_A": dense_init(ks[6], d, lora, jnp.float32),
+        "decay_B": dense_init(ks[7], lora, d, jnp.float32),
+        "bonus_u": jnp.zeros((H, D), jnp.float32),
+        "ln_scale": jnp.ones((d,), jnp.float32),  # per-head group norm
+    }
+
+
+def init_rwkv_cmix(key, cfg: ModelConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": jax.random.uniform(ks[0], (2, d), jnp.float32),   # k, r
+        "w_k": dense_init(ks[1], d, f, dt),
+        "w_v": dense_init(ks[2], f, d, dt),
+        "w_r": dense_init(jax.random.fold_in(key, 3), d, d, dt),
+    }
+
+
+def _mix(x, prev, mu):
+    """Token shift: lerp between current and previous token."""
+    return x + (prev - x) * mu
+
+
+def _decay(params: Dict, xw: jax.Array) -> jax.Array:
+    """Finch data-dependent decay, (…, d) in (0, 1)."""
+    lo = jnp.tanh(xw.astype(jnp.float32) @ params["decay_A"]) @ params["decay_B"]
+    return jnp.exp(-jnp.exp(params["decay_w0"] + lo))
+
+
+def _tmix_step(params, cfg, S, prev_x, x_t):
+    """One time-mix token.  x_t: (B, d).  Returns (S', y_t)."""
+    H, D = dims(cfg)
+    Bsz, d = x_t.shape
+    mu = params["mu"]
+    xr = _mix(x_t, prev_x, mu[0])
+    xk = _mix(x_t, prev_x, mu[1])
+    xv = _mix(x_t, prev_x, mu[2])
+    xw = _mix(x_t, prev_x, mu[3])
+    xg = _mix(x_t, prev_x, mu[4])
+
+    r = (xr @ params["w_r"]).reshape(Bsz, H, D).astype(jnp.float32)
+    k = (xk @ params["w_k"]).reshape(Bsz, H, D).astype(jnp.float32)
+    v = (xv @ params["w_v"]).reshape(Bsz, H, D).astype(jnp.float32)
+    g = jax.nn.silu((xg @ params["w_g"]).astype(jnp.float32))
+    w = _decay(params, xw).reshape(Bsz, H, D)
+
+    kv = jnp.einsum("bhi,bhj->bhij", k, v)             # (B,H,D,D)
+    y = jnp.einsum("bhi,bhij->bhj", r,
+                   S + params["bonus_u"][None, :, :, None] * kv)
+    S = w[..., None] * S + kv
+    y = y.reshape(Bsz, d)
+    # per-head group norm + gate + output proj
+    y = y.reshape(Bsz, H, D)
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6)
+    y = y.reshape(Bsz, d) * params["ln_scale"] * g
+    out = y.astype(x_t.dtype) @ params["w_o"]
+    return S, out
+
+
+def tmix_forward(params: Dict, cfg: ModelConfig, x: jax.Array,
+                 state: RwkvState, *, chunk: int = 64
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence time-mix.  x: (B, L, d).
+
+    All projections (r/k/v/g, data-dependent decay) are batched over the
+    whole sequence — only the O(d·D)-per-token wkv recurrence runs in the
+    chunked scan (rematerialized inner steps bound backward memory).
+    Returns (y, wkv_state', last_token).
+    """
+    Bsz, L, d = x.shape
+    _, D = dims(cfg)
+    H = params["w_r"].shape[1] // D      # local heads (sliced under SPMD)
+    Q = min(chunk, L)
+    while L % Q:
+        Q -= 1
+
+    mu = params["mu"]
+    prev0 = state.shift_tmix.astype(x.dtype)
+    shifted = jnp.concatenate([prev0[:, None], x[:, :-1]], axis=1)
+    xr = _mix(x, shifted, mu[0])
+    xk = _mix(x, shifted, mu[1])
+    xv = _mix(x, shifted, mu[2])
+    xw = _mix(x, shifted, mu[3])
+    xg = _mix(x, shifted, mu[4])
+
+    r = (xr @ params["w_r"]).reshape(Bsz, L, H, D).astype(jnp.float32)
+    k = (xk @ params["w_k"]).reshape(Bsz, L, H, D).astype(jnp.float32)
+    v = (xv @ params["w_v"]).reshape(Bsz, L, H, D).astype(jnp.float32)
+    g = jax.nn.silu((xg @ params["w_g"]).astype(jnp.float32))
+    w = _decay(params, xw).reshape(Bsz, L, H, D)
+    u = params["bonus_u"]
+
+    def chunk_body(S, slices):
+        rq, kq, vq, wq = slices              # (Q, B, H, D)
+
+        def step(Sc, t):
+            rt, kt, vt, wt = t
+            kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+            y = jnp.einsum("bhi,bhij->bhj", rt,
+                           Sc + u[None, :, :, None] * kv)
+            Sc = wt[..., None] * Sc + kv
+            return Sc, y
+
+        S, ys = jax.lax.scan(step, S, (rq, kq, vq, wq))
+        return S, ys
+
+    chunk_body = jax.checkpoint(chunk_body)
+    seq_first = lambda a: a.reshape(Bsz, L // Q, Q, *a.shape[2:]).transpose(
+        1, 2, 0, *range(3, a.ndim + 1))
+    S, ys = jax.lax.scan(chunk_body, state.wkv,
+                         (seq_first(r), seq_first(k), seq_first(v),
+                          seq_first(w)))
+    y = ys.reshape(L, Bsz, H, D).transpose(1, 0, 2, 3)   # (B, L, H, D)
+
+    # per-head group norm + gate + output projection (full sequence)
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6)
+    y = y.reshape(Bsz, L, H * D) * params["ln_scale"] * g
+    out = y.astype(x.dtype) @ params["w_o"]
+    return out, S, x[:, -1]
+
+
+def cmix_forward(params: Dict, x: jax.Array, prev_token: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Channel-mix over a sequence.  x: (B, L, d); prev_token: (B, d)."""
+    shifted = jnp.concatenate([prev_token[:, None].astype(x.dtype), x[:, :-1]],
+                              axis=1)
+    xk = _mix(x, shifted, params["mu"][0])
+    xr = _mix(x, shifted, params["mu"][1])
+    k = jnp.square(jax.nn.relu((xk @ params["w_k"]).astype(jnp.float32)))
+    v = k.astype(x.dtype) @ params["w_v"]
+    r = jax.nn.sigmoid((xr @ params["w_r"]).astype(jnp.float32))
+    return (r * v.astype(jnp.float32)).astype(x.dtype), x[:, -1]
+
+
+def rwkv_block_forward(tparams: Dict, cparams: Dict, cfg: ModelConfig,
+                       x: jax.Array, state: RwkvState,
+                       norms: Tuple[jax.Array, jax.Array], *,
+                       chunk: int = 64) -> Tuple[jax.Array, RwkvState]:
+    """One full RWKV layer (pre-norm residual)."""
+    n1, n2 = norms
+    h = rms_norm(x, n1, cfg.rms_norm_eps)
+    y, S, prev_t = tmix_forward(tparams, cfg, h, state, chunk=chunk)
+    x = x + y
+    h2 = rms_norm(x, n2, cfg.rms_norm_eps)
+    y2, prev_c = cmix_forward(cparams, h2, state.shift_cmix)
+    x = x + y2
+    return x, RwkvState(wkv=S, shift_tmix=prev_t, shift_cmix=prev_c)
+
+
+def rwkv_block_decode(tparams: Dict, cparams: Dict, cfg: ModelConfig,
+                      x: jax.Array, state: RwkvState,
+                      norms: Tuple[jax.Array, jax.Array]
+                      ) -> Tuple[jax.Array, RwkvState]:
+    """One-token decode through a layer.  x: (B, 1, d)."""
+    n1, n2 = norms
+    h = rms_norm(x, n1, cfg.rms_norm_eps)[:, 0]
+    S, y = _tmix_step(tparams, cfg, state.wkv, state.shift_tmix, h)
+    x = x + y[:, None]
+    h2 = rms_norm(x, n2, cfg.rms_norm_eps)
+    y2, prev_c = cmix_forward(cparams, h2, state.shift_cmix)
+    x = x + y2
+    return x, RwkvState(wkv=S, shift_tmix=h, shift_cmix=prev_c)
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> RwkvState:
+    H, D = dims(cfg)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return RwkvState(
+        wkv=jnp.zeros((batch, H, D, D), jnp.float32),
+        shift_tmix=jnp.zeros((batch, cfg.d_model), dt),
+        shift_cmix=jnp.zeros((batch, cfg.d_model), dt),
+    )
+
+
+def rwkv_block_spmd(cfg: ModelConfig, mesh, dp_axes, model_axis: str,
+                    chunk: int = 64):
+    """Explicit tensor-parallel RWKV layer (train/prefill).
+
+    Megatron pairing: every projection is column-sharded over the model
+    axis, the wkv recurrence runs entirely on local heads, and exactly ONE
+    all-reduce per sub-layer (w_o / w_v row-parallel partial sums) crosses
+    the network.  Replaces GSPMD propagation, which re-gathered the fp32
+    recurrence operands every layer (EXPERIMENTS.md §Perf iter 2).
+    """
+    from jax.sharding import PartitionSpec as P
+    mp = model_axis
+
+    def island(tp, cp, n1, n2, x, wkv, sh_t, sh_c):
+        h = rms_norm(x, n1, cfg.rms_norm_eps)
+        state = RwkvState(wkv=wkv, shift_tmix=sh_t, shift_cmix=sh_c)
+        y_part, S, prev_t = tmix_forward(tp, cfg, h, state, chunk=chunk)
+        y = jax.lax.psum(y_part, mp)            # row-parallel w_o
+        x = x + y
+        h2 = rms_norm(x, n2, cfg.rms_norm_eps)
+        # channel-mix: w_k col-, w_v row-parallel; gate r replicated
+        shifted = jnp.concatenate(
+            [sh_c[:, None].astype(h2.dtype), h2[:, :-1]], axis=1)
+        xk = _mix(h2, shifted, cp["mu"][0])
+        xr = _mix(h2, shifted, cp["mu"][1])
+        kk = jnp.square(jax.nn.relu((xk @ cp["w_k"]).astype(jnp.float32)))
+        v = jax.lax.psum(kk.astype(h2.dtype) @ cp["w_v"], mp)
+        rr = jax.nn.sigmoid((xr @ cp["w_r"]).astype(jnp.float32))
+        x = x + (rr * v.astype(jnp.float32)).astype(x.dtype)
+        return x, S, prev_t, h2[:, -1]
+
+    tmix_specs = {
+        "mu": P(None, None), "w_r": P(None, mp), "w_k": P(None, mp),
+        "w_v": P(None, mp), "w_g": P(None, mp), "w_o": P(mp, None),
+        "decay_w0": P(mp), "decay_A": P(None, None), "decay_B": P(None, mp),
+        "bonus_u": P(mp, None), "ln_scale": P(mp),
+    }
+    cmix_specs = {"mu": P(None, None), "w_k": P(None, mp),
+                  "w_v": P(mp, None), "w_r": P(None, None)}
+    dp = dp_axes
+    return jax.shard_map(
+        island, mesh=mesh,
+        in_specs=(tmix_specs, cmix_specs, P(None), P(None),
+                  P(dp, None, None),                       # x
+                  P(dp, mp, None, None),                   # wkv state
+                  P(dp, None), P(dp, None)),               # shifts
+        out_specs=(P(dp, None, None), P(dp, mp, None, None),
+                   P(dp, None), P(dp, None)),
+        check_vma=False)

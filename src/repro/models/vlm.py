@@ -1,0 +1,50 @@
+"""Qwen2-VL frontend stub + M-RoPE position builders.
+
+The ViT patch encoder is stubbed (DESIGN.md): the backbone consumes token
+embeddings plus 3-stream M-RoPE position ids.  This module builds the
+(t, h, w) position grids for image patches placed in a text sequence —
+the piece of Qwen2-VL that actually interacts with the backbone.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.rope import text_mrope_positions
+
+
+def image_mrope_positions(text_len_before: int, grid_h: int, grid_w: int,
+                          text_len_after: int) -> jax.Array:
+    """(3, seq) position ids for [text, image(h×w patches), text].
+
+    Text tokens advance all three streams together; image patches share one
+    temporal position while h/w advance over the grid (Qwen2-VL §2.1).
+    """
+    t0 = text_len_before
+    txt0 = jnp.arange(t0, dtype=jnp.int32)
+    pre = jnp.stack([txt0, txt0, txt0])
+
+    hh, ww = jnp.meshgrid(jnp.arange(grid_h, dtype=jnp.int32),
+                          jnp.arange(grid_w, dtype=jnp.int32), indexing="ij")
+    n_patch = grid_h * grid_w
+    img = jnp.stack([jnp.full((n_patch,), t0, jnp.int32),
+                     (t0 + hh.reshape(-1)).astype(jnp.int32),
+                     (t0 + ww.reshape(-1)).astype(jnp.int32)])
+
+    # text after the image resumes from max position + 1
+    t1 = t0 + max(grid_h, grid_w)
+    txt1 = jnp.arange(t1, t1 + text_len_after, dtype=jnp.int32)
+    post = jnp.stack([txt1, txt1, txt1])
+    return jnp.concatenate([pre, img, post], axis=1)
+
+
+def patch_embeddings(cfg: ModelConfig, batch: int, n_patches: int,
+                     seed: int = 0) -> jax.Array:
+    """Precomputed ViT patch embedding stand-in: (B, n_patches, d_model)."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (batch, n_patches, cfg.d_model),
+                             jnp.float32) * 0.1

@@ -1,0 +1,27 @@
+"""Whisper frontend stub (DESIGN.md: modality frontends are stubs).
+
+The real model converts 30 s of audio to a log-mel spectrogram and runs two
+conv layers producing 1500 frame embeddings.  Per the assignment, the
+backbone is what counts: ``frame_embeddings`` fabricates deterministic
+(batch, 1500, d_model) inputs, matching ``input_specs()`` in the dry-run.
+The transformer itself lives in models/transformer.py (`_build_encdec`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frame_embeddings(cfg: ModelConfig, batch: int, seed: int = 0) -> jax.Array:
+    """Precomputed conv-frontend output stand-in: (B, 1500, d_model)."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(
+        key, (batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32) * 0.1
+
+
+def frame_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, cfg.encoder_seq_len, cfg.d_model),
+                                jnp.bfloat16)

@@ -1,0 +1,5 @@
+"""Serving runtime: continuous batching engine (SPMD, jitted) and the
+host-level physically-disaggregated engine (paper-literal buffer protocol)."""
+
+from repro.serving.engine import ServingEngine, EngineConfig  # noqa: F401
+from repro.serving.request import Request, SamplingParams  # noqa: F401

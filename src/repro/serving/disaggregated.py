@@ -1,0 +1,233 @@
+"""Physically-disaggregated serving: the paper's client/server protocol,
+literally (§3.2–§3.4, Fig. 5–7).
+
+Attention clients and expert servers are independent actors that interact
+ONLY through :class:`~repro.core.monitor.SharedBuffer` slots (state flag +
+header + payload) — the host-level model of one-sided RDMA.  The server
+never initiates communication: it polls its buffer slots, aggregates every
+ready request into one dynamic batch, reorganizes tokens by expert, runs
+the grouped expert computation, writes results back and flips the flags.
+
+Failure handling is the paper's dual path: the monitor's heartbeat timeout
+(path ①) or the client's own request timeout (path ②(b)) — whichever
+fires first masks the server out of the client's mapping and the request is
+re-sent to a replica.
+
+Deterministic cooperative scheduling (tick()) keeps runs replayable; the
+protocol itself is agnostic to who drives the actors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import mapping as emap
+from repro.core.monitor import Monitor, SharedBuffer
+from repro.kernels import ops as kops
+
+
+class ExpertServerProc:
+    """A stateless expert service instance (paper §3.3)."""
+
+    def __init__(self, rank: int, cfg: ModelConfig, bank: Dict,
+                 expert_ids: List[int], capacity: int, d_model: int,
+                 min_batch: int = 1):
+        self.rank = rank
+        self.cfg = cfg
+        self.expert_ids = list(expert_ids)
+        self.local = {e: i for i, e in enumerate(self.expert_ids)}
+        self.w_gate = jnp.stack([bank["w_gate"][e] for e in expert_ids])
+        self.w_up = jnp.stack([bank["w_up"][e] for e in expert_ids])
+        self.w_down = jnp.stack([bank["w_down"][e] for e in expert_ids])
+        self.buffers: Dict[str, SharedBuffer] = {}
+        self.capacity = capacity
+        self.d_model = d_model
+        self.min_batch = min_batch
+        self.alive = True
+        self.served_tokens = 0
+        self.batches = 0
+
+    # registration: a client attaches a buffer (paper §4.4 connection setup)
+    def attach_client(self, client_id: str) -> SharedBuffer:
+        buf = SharedBuffer(self.capacity, self.d_model)
+        self.buffers[client_id] = buf
+        return buf
+
+    def release_client(self, client_id: str) -> None:
+        if client_id in self.buffers:
+            self.buffers[client_id].release()
+
+    def tick(self) -> None:
+        """Poll flags; aggregate ready slots into ONE dynamic batch."""
+        if not self.alive:
+            return
+        ready = [(cid, b) for cid, b in self.buffers.items() if b.poll()]
+        if len(ready) < self.min_batch:
+            return
+        hid, eid, sc, spans = [], [], [], []
+        for cid, b in ready:
+            _, h, e, s = b.take_request()
+            spans.append((b, len(h)))
+            hid.append(h)
+            eid.append(e)
+            sc.append(s)
+        x = jnp.asarray(np.concatenate(hid))            # (M, d)
+        eids = np.concatenate(eid)
+        scores = jnp.asarray(np.concatenate(sc))
+
+        # reorganize by local expert + grouped GEMM (Fig. 5)
+        slot = np.array([self.local.get(int(e), -1) for e in eids])
+        order = np.argsort(slot, kind="stable")
+        L = len(self.expert_ids)
+        sizes = np.bincount(slot[slot >= 0], minlength=L).astype(np.int32)
+        xs = x[jnp.asarray(order)]
+        h1 = kops.grouped_gemm(xs, self.w_gate, jnp.asarray(sizes),
+                               impl="xla_ragged")
+        h2 = kops.grouped_gemm(xs, self.w_up, jnp.asarray(sizes),
+                               impl="xla_ragged")
+        h = jax.nn.silu(h1.astype(jnp.float32)).astype(h2.dtype) * h2
+        y = kops.grouped_gemm(h, self.w_down, jnp.asarray(sizes),
+                              impl="xla_ragged")
+        out = np.zeros((x.shape[0], self.d_model), np.float32)
+        out[order] = np.asarray(y)
+        out *= np.asarray(scores)[:, None]              # score-weight
+        out[slot < 0] = 0.0                             # not hosted
+
+        off = 0
+        for b, n in spans:
+            b.write_result(out[off:off + n])
+            off += n
+        self.served_tokens += int(x.shape[0])
+        self.batches += 1
+
+
+@dataclass
+class _Pending:
+    server: int
+    buf: SharedBuffer
+    rows: np.ndarray          # (n,) flat indices into (T*k)
+    sent_tick: int
+
+
+class AttentionClientProc:
+    """The MoE-layer client side: route → write slots → poll → combine."""
+
+    def __init__(self, client_id: str, cfg: ModelConfig, router_w: np.ndarray,
+                 smap: emap.ExpertServerMap, servers: List[ExpertServerProc],
+                 timeout_ticks: int = 3):
+        self.client_id = client_id
+        self.cfg = cfg
+        self.router_w = jnp.asarray(router_w)
+        self.smap = smap
+        self.servers = servers
+        self.timeout = timeout_ticks
+        self.buffers = {s.rank: s.attach_client(client_id) for s in servers}
+        self.tick_now = 0
+        self.retries = 0
+
+    def _route(self, x: np.ndarray):
+        from repro.core.router import route
+        return route({"w_router": self.router_w}, jnp.asarray(x),
+                     self.cfg.moe)
+
+    def moe_layer(self, x: np.ndarray, drive) -> np.ndarray:
+        """One full MoE layer through the disaggregated tier.
+
+        ``drive()`` advances servers one tick (the cooperative scheduler).
+        Event loop: route unsent rows to alive servers whose slot is free
+        (one outstanding request per (client, server) slot — the paper's
+        fixed buffer); poll pendings; a response timeout masks the server
+        out of the mapping and its rows are re-routed (paper Fig. 6 ②(b)).
+        """
+        T, d = x.shape
+        k = self.cfg.moe.top_k
+        r = self._route(x)
+        eids = np.asarray(r.expert_ids).reshape(-1)
+        scores = np.asarray(r.scores).reshape(-1)
+        out = np.zeros((T, d), np.float32)
+
+        unsent = np.arange(T * k)
+        pending: List[_Pending] = []
+        guard = 0
+        while (len(unsent) or pending) and guard < 200:
+            guard += 1
+            # ---- send phase -------------------------------------------
+            if len(unsent):
+                table, alive = self.smap.device_arrays()
+                sel = np.asarray(emap.lookup(
+                    table, alive, jnp.asarray(eids[unsent])[:, None],
+                    jnp.asarray(unsent % 1024)[:, None]))[:, 0]
+                still_unsent = []
+                busy = {p.server for p in pending}
+                for s in sorted(set(sel.tolist())):
+                    rows = unsent[sel == s]
+                    buf = self.buffers[s]
+                    if s in busy:
+                        still_unsent.extend(rows)      # slot occupied: wait
+                        continue
+                    if buf.state == 2:                 # stale result: drain
+                        buf.try_read_result()
+                    if buf.state != 0:                 # stuck slot → dead
+                        self.smap.mark_dead(s)
+                        self.retries += 1
+                        still_unsent.extend(rows)
+                        continue
+                    buf.write_request(0, x[rows // k], eids[rows],
+                                      scores[rows])
+                    pending.append(_Pending(s, buf, rows, self.tick_now))
+                unsent = np.asarray(still_unsent, dtype=np.int64)
+            # ---- poll phase -------------------------------------------
+            drive()
+            self.tick_now += 1
+            still = []
+            for p in pending:
+                res = p.buf.try_read_result()
+                if res is not None:
+                    for row, val in zip(p.rows, res):
+                        out[row // k] += val
+                elif self.tick_now - p.sent_tick > self.timeout:
+                    # paper Fig.6 ②(b): timeout → mask server, re-route
+                    self.smap.mark_dead(p.server)
+                    self.retries += 1
+                    unsent = np.concatenate([unsent, p.rows])
+                else:
+                    still.append(p)
+            pending = still
+        assert not (len(unsent) or pending), "requests stuck: no live replica"
+        return out
+
+
+def build_cluster(cfg: ModelConfig, n_clients: int, n_servers: int,
+                  n_redundant: int = 2, capacity: int = 512, seed: int = 0):
+    """Wire up a disaggregated cluster over one weight bank."""
+    from repro.core.expert_server import init_expert_weights
+    from repro.core.load_balance import eplb_plan
+    from repro.core.router import init_router
+
+    from repro.core.load_balance import primary_owner
+
+    m = cfg.moe
+    key = jax.random.PRNGKey(seed)
+    bank = init_expert_weights(key, cfg)
+    mapping, red = eplb_plan(np.ones(m.num_experts), n_servers, n_redundant)
+    smap = emap.ExpertServerMap(mapping, n_servers)
+    owner = primary_owner(m.num_experts, n_servers)
+    servers = []
+    for s in range(n_servers):
+        hosted = [int(e) for e in np.where(owner == s)[0]] + \
+            [int(e) for e in red[s] if e >= 0]
+        servers.append(ExpertServerProc(s, cfg, bank, hosted, capacity,
+                                        cfg.d_model))
+    router_w = np.asarray(
+        init_router(jax.random.fold_in(key, 1), cfg.d_model,
+                    m.num_experts)["w_router"])
+    clients = [AttentionClientProc(f"client{i}", cfg, router_w, smap,
+                                   servers) for i in range(n_clients)]
+    return clients, servers, smap, bank

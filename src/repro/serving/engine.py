@@ -1,0 +1,261 @@
+"""Continuous-batching serving engine.
+
+One engine class serves three system modes (paper §5 baselines):
+
+* ``mode="eaas"``        — EAAS: replicated experts, liveness-masked mapping;
+  a server failure re-routes traffic to replicas within the same step
+  (throughput dips only by the lost compute share — paper Fig. 10).
+* ``mode="monolithic_ep"`` — DeepEP-style: primary-only mapping; a server
+  failure halts the WHOLE engine for ``restart_steps`` (the collective-group
+  restart) before resuming.
+* ``mode="tp"``          — tensor-parallel MoE: failure halts only the
+  16-GPU unit (modeled as a shorter stall) but per-unit weight replication
+  caps the max batch (``tp_batch_cap``).
+
+The expert→server mapping, liveness mask and local placement table are
+**jit arguments**, not compiled constants — failover and rebalancing never
+trigger recompilation (the paper's no-group-rebuild property).
+
+The engine clock accumulates real jitted step wall-times, so CPU runs give
+meaningful *relative* curves.  Prompt lengths are bucketed by the caller to
+bound prefill recompiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.elastic import ServerPool
+from repro.core.monitor import Monitor
+from repro.models.transformer import Model, ParallelCtx, build_model
+from repro.serving.metrics import ServingMetrics
+from repro.serving.request import Request
+from repro.serving.sampling import sample
+
+
+@dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_seq: int = 256
+    mode: str = "eaas"                 # eaas | monolithic_ep | tp
+    num_servers: int = 4
+    n_redundant: int = 2
+    restart_steps: int = 50            # monolithic group restart cost
+    tp_restart_steps: int = 12         # one TP unit restart
+    tp_batch_cap: Optional[int] = None # TP: weight replication caps batch
+    gemm_impl: str = "xla_ragged"
+    eos_token: Optional[int] = None
+
+
+class ServingEngine:
+    """Continuous batching over a fixed slot pool with EAAS failover."""
+
+    def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig,
+                 params=None, seed: int = 0):
+        self.cfg = cfg
+        self.ecfg = engine_cfg
+        S = engine_cfg.num_servers if engine_cfg.mode != "tp" else 1
+        self.pool = None
+        if cfg.moe:
+            self.pool = ServerPool(
+                cfg, S, tokens_per_client=engine_cfg.max_batch,
+                n_redundant=(engine_cfg.n_redundant
+                             if engine_cfg.mode == "eaas" else 0))
+        self.model = build_model(
+            cfg, num_servers=S if cfg.moe else 1,
+            redundant_table=self.pool.redundant_table if self.pool else None)
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None else \
+            self.model.init_params(key)
+        self.monitor = Monitor(heartbeat_timeout=3.0)
+        if self.pool:
+            self.monitor.subscribe_server_down(self.pool.server_failed)
+
+        # static runtime skeleton — arrays swapped per step via jit args
+        self._rt0 = self.pool.runtime(engine_cfg.gemm_impl) \
+            if self.pool else None
+
+        B, L = engine_cfg.max_batch, engine_cfg.max_seq
+        self.cache = self.model.init_cache(B, L)
+        self.slots: List[Optional[Request]] = [None] * B
+        self.queue: deque = deque()
+        self.metrics = ServingMetrics()
+        self.step_idx = 0
+        self.clock = 0.0
+        self.halted_until = -1
+        self._last_decode_time = 0.01
+        self._key = jax.random.PRNGKey(seed + 1)
+
+        model, ecfg, rt0 = self.model, self.ecfg, self._rt0
+
+        def ctx_of(rt_arrays):
+            rt = None
+            if rt0 is not None:
+                mapping, alive, local = rt_arrays
+                rt = rt0._replace(mapping=mapping, alive=alive,
+                                  local_table=local)
+            return ParallelCtx(moe_runtime=rt, gemm_impl=ecfg.gemm_impl,
+                               remat=False)
+
+        def prefill_fn(params, tokens, rt_arrays):
+            return model.prefill(params, tokens, ctx_of(rt_arrays),
+                                 max_slots=ecfg.max_seq)
+
+        def decode_fn(params, tokens, cache, rt_arrays):
+            logits, cache, _ = model.decode_step(params, tokens, cache,
+                                                 ctx_of(rt_arrays))
+            return logits, cache
+
+        self._jit_prefill = jax.jit(prefill_fn)
+        self._jit_decode = jax.jit(decode_fn)
+
+    # ------------------------------------------------------------ helpers
+    def _rt_arrays(self):
+        if self.pool is None:
+            return ()
+        rt = self.pool.runtime(self.ecfg.gemm_impl)
+        return (rt.mapping, rt.alive, rt.local_table)
+
+    # ------------------------------------------------------------- control
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+        self.metrics.total_requests += 1
+
+    def inject_server_failure(self, rank: int) -> None:
+        """Simulated hardware failure of one expert server (paper §5.4)."""
+        self.metrics.events.append(
+            {"t": self.clock, "event": "server_fail", "rank": rank,
+             "mode": self.ecfg.mode})
+        if self.ecfg.mode == "eaas":
+            if self.pool and rank < self.pool.num_servers:
+                self.pool.server_failed(rank)     # mapping mask update only
+        elif self.ecfg.mode == "monolithic_ep":
+            self.halted_until = self.step_idx + self.ecfg.restart_steps
+        elif self.ecfg.mode == "tp":
+            self.halted_until = self.step_idx + self.ecfg.tp_restart_steps
+
+    def recover_server(self, rank: int) -> None:
+        self.metrics.events.append(
+            {"t": self.clock, "event": "server_recover", "rank": rank})
+        if self.pool and rank < self.pool.num_servers:
+            self.pool.server_recovered(rank)
+
+    def rebalance(self) -> None:
+        """EPLB-style replica re-planning from live traffic (paper §4.5)."""
+        if self.pool:
+            self.pool.rebalance()
+
+    # --------------------------------------------------------------- slots
+    def _admit(self) -> None:
+        cap = self.ecfg.tp_batch_cap if self.ecfg.mode == "tp" else None
+        for b in range(len(self.slots)):
+            if cap is not None and b >= cap:
+                break
+            if self.slots[b] is None and self.queue:
+                self._prefill_into(b, self.queue.popleft())
+
+    def _prefill_into(self, b: int, req: Request) -> None:
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        t0 = time.perf_counter()
+        logits, cache_one = self._jit_prefill(self.params, tokens,
+                                              self._rt_arrays())
+        logits.block_until_ready()
+        self.clock += time.perf_counter() - t0
+        self.cache = jax.tree.map(
+            lambda big, one: _slot_write(big, one, b), self.cache, cache_one)
+        self._key, sk = jax.random.split(self._key)
+        first = int(sample(logits, req.sampling.temperature, sk)[0])
+        req.output_tokens.append(first)
+        req.prefill_time = self.clock
+        self.slots[b] = req
+        self.metrics.events.append(
+            {"t": self.clock, "event": "prefill", "rid": req.request_id})
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> None:
+        """One engine iteration: admit, decode, retire."""
+        self.step_idx += 1
+        if self.step_idx <= self.halted_until:
+            # monolithic restart: time passes, no tokens are produced
+            self.clock += self._last_decode_time
+            self.metrics.timeline.append(
+                {"t": self.clock, "tokens": 0, "halted": True})
+            return
+        self._admit()
+        active = [b for b, r in enumerate(self.slots) if r is not None]
+        if not active:
+            self.clock += 1e-4
+            return
+        tokens = np.zeros((len(self.slots), 1), np.int32)
+        for b, r in enumerate(self.slots):
+            if r is not None:
+                tokens[b, 0] = r.output_tokens[-1]
+        t0 = time.perf_counter()
+        logits, self.cache = self._jit_decode(
+            self.params, jnp.asarray(tokens), self.cache, self._rt_arrays())
+        logits.block_until_ready()
+        dt = time.perf_counter() - t0
+        self._last_decode_time = dt
+        self.clock += dt
+        self._key, sk = jax.random.split(self._key)
+        next_tokens = np.asarray(sample(logits, 0.0, sk))
+
+        produced = 0
+        for b in active:
+            r = self.slots[b]
+            tok = int(next_tokens[b])
+            r.output_tokens.append(tok)
+            r.token_times.append(self.clock)
+            produced += 1
+            self.metrics.total_output_tokens += 1
+            done = (len(r.output_tokens) >= r.sampling.max_new_tokens or
+                    (self.ecfg.eos_token is not None and
+                     tok == self.ecfg.eos_token) or
+                    len(r.prompt) + len(r.output_tokens) >=
+                    self.ecfg.max_seq - 1)
+            if done:
+                r.finish_time = self.clock
+                self.metrics.completed += 1
+                self.metrics.itls.extend(r.itl())
+                self.slots[b] = None
+        self.metrics.timeline.append(
+            {"t": self.clock, "tokens": produced, "halted": False})
+
+    def run(self, max_steps: int = 10_000,
+            on_step: Optional[Callable[["ServingEngine"], None]] = None
+            ) -> ServingMetrics:
+        """Drive until queue + slots drain (or max_steps)."""
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and self.step_idx < max_steps:
+            if on_step:
+                on_step(self)
+            self.step()
+        self.metrics.wall_time = self.clock
+        return self.metrics
+
+
+def _slot_write(big, one, b: int):
+    """Write a batch-1 cache pytree leaf into slot b of the engine cache.
+
+    The batch dim is the first one where `big` and `one` differ with
+    ``one == 1``.
+    """
+    if not hasattr(big, "shape"):
+        return big
+    if big.shape == getattr(one, "shape", None):
+        return one.astype(big.dtype)      # max_batch == 1: replace wholesale
+    for axis, (db, do) in enumerate(zip(big.shape, one.shape)):
+        if db != do and do == 1:
+            idx = [slice(None)] * big.ndim
+            idx[axis] = slice(b, b + 1)
+            return big.at[tuple(idx)].set(one.astype(big.dtype))
+    return big

@@ -1,0 +1,14 @@
+"""Token sampling from logits."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, temperature: float, key) -> jax.Array:
+    """logits: (B, V) fp32 -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(
+        jnp.int32)

@@ -1,0 +1,5 @@
+"""Training substrate: optimizers, train step, checkpointing, data pipeline,
+gradient compression.  Self-contained (no optax/orbax dependency)."""
+
+from repro.training.optimizer import (adafactor, adamw, OptimizerBundle)  # noqa: F401
+from repro.training.train_loop import make_train_step, TrainState  # noqa: F401

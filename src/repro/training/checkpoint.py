@@ -1,0 +1,149 @@
+"""Fault-tolerant checkpointing: sharded save/restore with atomic commit and
+optional async (background-thread) writes.
+
+Layout:  <dir>/step_<N>/<flat.param.path>.npy + manifest.json
+Atomicity: writes go to ``step_<N>.tmp`` and are renamed only after the
+manifest is fsynced — a killed writer never corrupts the latest checkpoint
+(restart-after-failure is the paper-scale requirement; see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree, *,
+                    keep: int = 3) -> str:
+    """Synchronous atomic save.  Returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    manifest = {}
+    for key, arr in flat.items():
+        fname = key.replace("/", ".") + ".npy"
+        # byte-view: np.save degrades extension dtypes (bfloat16) to void
+        raw = np.ascontiguousarray(arr).view(np.uint8)
+        np.save(os.path.join(tmp, fname), raw)
+        manifest[key] = {"file": fname, "shape": list(arr.shape),
+                         "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "params": manifest}, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                     # atomic commit
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d))
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, tree_like, step: Optional[int] = None):
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)["params"]
+
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(tree_like)
+    flat, treedef = leaves_with_path
+    out = []
+    for p, leaf in flat:
+        key = "/".join(_path_str(x) for x in p)
+        meta = manifest[key]
+        raw = np.load(os.path.join(path, meta["file"]))
+        dtype = _resolve_dtype(meta["dtype"])
+        arr = raw.view(dtype).reshape(meta["shape"])
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape,
+                                                       leaf.shape)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree_like), out), step
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: training never blocks on I/O.  The device→
+    host copy happens on the caller thread (cheap); serialization + fsync on
+    the worker.  ``wait()`` drains pending writes (call before exit)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot now
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree,
+                                keep=self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,140 @@
+"""Optimizers: AdamW (small models) and Adafactor (factored second moments —
+the only optimizer whose state fits for the 1T-parameter MoEs at 256 chips).
+
+Functional API:  ``opt.init(params) -> state``;
+``opt.update(grads, state, params, step) -> (updates, state)``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptimizerBundle(NamedTuple):
+    init: Callable
+    update: Callable
+    name: str
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ------------------------------------------------------------------- AdamW
+
+def adamw(lr: Callable | float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> OptimizerBundle:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        t = jnp.asarray(step, jnp.float32) + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * jnp.square(g)
+            mu_hat = mu / (1 - b1 ** t)
+            nu_hat = nu / (1 - b2 ** t)
+            u = mu_hat / (jnp.sqrt(nu_hat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), mu, nu
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, n, p)
+               for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        state = {"mu": treedef.unflatten([o[1] for o in out]),
+                 "nu": treedef.unflatten([o[2] for o in out])}
+        return updates, state
+
+    return OptimizerBundle(init, update, "adamw")
+
+
+# --------------------------------------------------------------- Adafactor
+
+def adafactor(lr: Callable | float = 1e-2, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0
+              ) -> OptimizerBundle:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018).
+
+    For a (..., R, C) tensor the second moment is stored as row/col factors —
+    O(R + C) instead of O(R·C).  First moment omitted (β1 = 0), matching the
+    memory-lean configuration used for trillion-parameter training.
+    """
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        def factors(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(factors, params,
+                                  is_leaf=lambda x: hasattr(x, "ndim"))}
+
+    def update(grads, state, params, step):
+        t = jnp.asarray(step, jnp.float32) + 1
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, f, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr = beta * f["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * f["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)[..., None]
+                v = (vr[..., None] * vc[..., None, :]) / denom
+                nf = {"vr": vr, "vc": vc}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                nf = {"v": v}
+            u = g / jnp.sqrt(v + eps)
+            # update clipping (Adafactor's RMS-based trust ratio)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr_t * u).astype(p.dtype), nf
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_f = treedef.flatten_up_to(state["f"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, f, p) for g, f, p in zip(flat_g, flat_f, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        state = {"f": treedef.unflatten([o[1] for o in out])}
+        return updates, state
+
+    return OptimizerBundle(init, update, "adafactor")

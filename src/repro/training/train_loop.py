@@ -1,0 +1,111 @@
+"""Train step + loop.
+
+``make_train_step(model, opt, ...)`` builds the jittable
+``train_step(state, batch) -> (state, metrics)`` used by both the CPU
+examples and the multi-pod dry-run.  Optional int8 gradient compression
+(error feedback) applies to the data-parallel reduction — a distributed-
+optimization knob for scale (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model, ParallelCtx
+from repro.training.optimizer import OptimizerBundle, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+    # error-feedback residual for compressed gradients (None = off)
+    ef_residual: Any = None
+
+
+def init_train_state(model: Model, opt: OptimizerBundle, key,
+                     compression: bool = False) -> TrainState:
+    params = model.init_params(key)
+    ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+        if compression else None
+    return TrainState(params=params, opt_state=opt.init(params),
+                      step=jnp.zeros((), jnp.int32), ef_residual=ef)
+
+
+def _compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization."""
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def make_train_step(model: Model, opt: OptimizerBundle, ctx: ParallelCtx,
+                    *, max_grad_norm: float = 1.0,
+                    compression: bool = False) -> Callable:
+    """Build train_step.  With ``compression=True`` gradients pass through an
+    int8 quantize/dequantize with error feedback before the optimizer —
+    modeling a compressed DP all-reduce (the quantization error is carried
+    to the next step, preserving convergence)."""
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        def loss_of(p):
+            loss, metrics = model.loss_fn(p, batch, ctx)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(state.params)
+
+        ef = state.ef_residual
+        if compression:
+            def comp(g, r):
+                g32 = g.astype(jnp.float32) + r
+                q, scale = _compress_int8(g32)
+                deq = _decompress_int8(q, scale)
+                return deq.astype(g.dtype), g32 - deq
+            pairs = jax.tree.map(comp, grads, ef)
+            grads = jax.tree.map(lambda pr: pr[0], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+            ef = jax.tree.map(lambda pr: pr[1], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params,
+                                        state.step)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                              state.params, updates)
+        new_state = TrainState(params=params, opt_state=opt_state,
+                               step=state.step + 1, ef_residual=ef)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_state, metrics
+
+    return train_step
+
+
+def train_loop(model: Model, opt: OptimizerBundle, ctx: ParallelCtx,
+               data_iter, num_steps: int, key, *, log_every: int = 10,
+               checkpoint_fn: Optional[Callable] = None,
+               checkpoint_every: int = 0, compression: bool = False):
+    """CPU-scale driver used by the examples (train a ~100M model)."""
+    state = init_train_state(model, opt, key, compression)
+    step_fn = jax.jit(make_train_step(model, opt, ctx,
+                                      compression=compression))
+    history = []
+    for i in range(num_steps):
+        batch = next(data_iter)
+        state, metrics = step_fn(state, batch)
+        if i % log_every == 0 or i == num_steps - 1:
+            history.append({"step": i, "loss": float(metrics["loss"]),
+                            "grad_norm": float(metrics["grad_norm"])})
+            print(f"step {i:5d}  loss {history[-1]['loss']:.4f}  "
+                  f"gnorm {history[-1]['grad_norm']:.3f}")
+        if checkpoint_fn and checkpoint_every and (i + 1) % checkpoint_every == 0:
+            checkpoint_fn(state, i + 1)
+    return state, history

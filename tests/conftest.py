@@ -1,0 +1,17 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; SPMD tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _cpu_only():
+    assert jax.default_backend() == "cpu"
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

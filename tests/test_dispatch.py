@@ -1,0 +1,98 @@
+"""Dispatch invariants: packing conservation, method equivalence, combine."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dispatch
+
+
+def _random_routing(rng, T, k, S):
+    x = rng.normal(size=(T, 8)).astype(np.float32)
+    eids = rng.integers(0, 100, size=(T, k)).astype(np.int32)
+    scores = rng.random(size=(T, k)).astype(np.float32)
+    servers = rng.integers(0, S, size=(T, k)).astype(np.int32)
+    return x, eids, scores, servers
+
+
+@pytest.mark.parametrize("method", ["sort", "onehot"])
+def test_pack_conservation(method, rng):
+    T, k, S, C = 32, 4, 4, 64          # ample capacity: nothing dropped
+    x, eids, scores, servers = _random_routing(rng, T, k, S)
+    buf = dispatch.pack(jnp.asarray(x), jnp.asarray(eids),
+                        jnp.asarray(scores), jnp.asarray(servers), S, C,
+                        method=method)
+    assert int(buf.dropped) == 0
+    assert int(jnp.sum(buf.counts)) == T * k
+    # every (token, k) appears at its combine_slot with the right payload
+    hid = np.asarray(buf.hidden).reshape(S * C, -1)
+    eid = np.asarray(buf.expert_id).reshape(S * C)
+    sc = np.asarray(buf.score).reshape(S * C)
+    cs = np.asarray(buf.combine_slot)
+    for t in range(T):
+        for j in range(k):
+            slot = cs[t, j]
+            assert slot >= 0
+            np.testing.assert_allclose(hid[slot], x[t], rtol=1e-6)
+            assert eid[slot] == eids[t, j]
+            np.testing.assert_allclose(sc[slot], scores[t, j], rtol=1e-6)
+
+
+def test_pack_methods_equivalent(rng):
+    T, k, S, C = 48, 2, 3, 16          # tight capacity: drops happen
+    x, eids, scores, servers = _random_routing(rng, T, k, S)
+    a = dispatch.pack(jnp.asarray(x), jnp.asarray(eids), jnp.asarray(scores),
+                      jnp.asarray(servers), S, C, method="sort")
+    b = dispatch.pack(jnp.asarray(x), jnp.asarray(eids), jnp.asarray(scores),
+                      jnp.asarray(servers), S, C, method="onehot")
+    for fa, fb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+def test_capacity_drop_counted(rng):
+    T, k, S, C = 16, 2, 2, 4
+    x, eids, scores, _ = _random_routing(rng, T, k, S)
+    servers = np.zeros((T, k), np.int32)       # everything to server 0
+    buf = dispatch.pack(jnp.asarray(x), jnp.asarray(eids),
+                        jnp.asarray(scores), jnp.asarray(servers), S, C)
+    assert int(buf.dropped) == T * k - C
+    assert int(buf.counts[0]) == C
+    assert int(buf.counts[1]) == 0
+
+
+def test_combine_weighted_sum(rng):
+    T, k, S, C, d = 8, 2, 2, 16, 4
+    x = rng.normal(size=(T, d)).astype(np.float32)
+    scores = rng.random(size=(T, k)).astype(np.float32)
+    eids = np.zeros((T, k), np.int32)
+    servers = rng.integers(0, S, size=(T, k)).astype(np.int32)
+    buf = dispatch.pack(jnp.asarray(x), jnp.asarray(eids),
+                        jnp.asarray(scores), jnp.asarray(servers), S, C)
+    # a server that multiplies by 2 and pre-weights by score
+    result = buf.hidden * 2.0 * buf.score[..., None]
+    y = dispatch.combine(result, buf.combine_slot)
+    expected = 2.0 * x * scores.sum(axis=1, keepdims=True)
+    np.testing.assert_allclose(y, expected, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(T=st.integers(1, 40), k=st.integers(1, 4), S=st.integers(1, 6),
+       C=st.integers(1, 32), seed=st.integers(0, 999))
+def test_pack_properties(T, k, S, C, seed):
+    """Hypothesis: counts ≤ C; dropped = total - delivered; slots unique."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(T, 3)).astype(np.float32)
+    eids = rng.integers(0, 50, size=(T, k)).astype(np.int32)
+    scores = rng.random(size=(T, k)).astype(np.float32)
+    servers = rng.integers(0, S, size=(T, k)).astype(np.int32)
+    buf = dispatch.pack(jnp.asarray(x), jnp.asarray(eids),
+                        jnp.asarray(scores), jnp.asarray(servers), S, C)
+    counts = np.asarray(buf.counts)
+    assert (counts <= C).all()
+    delivered = int(counts.sum())
+    assert delivered + int(buf.dropped) == T * k
+    slots = np.asarray(buf.combine_slot).reshape(-1)
+    live = slots[slots >= 0]
+    assert len(np.unique(live)) == len(live)          # no slot collisions
+    assert len(live) == delivered

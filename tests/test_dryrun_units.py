@@ -1,0 +1,111 @@
+"""Dry-run machinery unit tests (no 512-device compile): collective parsing,
+probe extrapolation, input specs, cache sharding specs, applicability."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_SHAPES, ASSIGNED_ARCHS, applicable, get_config, shape_by_name
+
+
+def _dry():
+    # import inside a helper: module sets XLA_FLAGS before jax import, which
+    # is a no-op here because jax is already initialized with 1 device
+    from repro.launch import dryrun
+    return dryrun
+
+
+def test_parse_collective_bytes_tuple_and_async():
+    dr = _dry()
+    hlo = """
+  %all-to-all.3 = (f32[2,32]{1,0}, f32[2,32]{1,0}) all-to-all(%a, %b), dims={0}
+  %ag = bf16[4,8]{1,0} all-gather(%x), dimensions={0}
+  %ar-start = f32[16]{0} all-reduce-start(%y), to_apply=%add
+  %ar-done = f32[16]{0} all-reduce-done(%ar-start)
+  %gte = f32[2,32]{1,0} get-tuple-element(%all-to-all.3), index=0
+"""
+    got = dr.parse_collective_bytes(hlo)
+    assert got["all-to-all"] == 2 * 2 * 32 * 4
+    assert got["all-gather"] == 4 * 8 * 2
+    assert got["all-reduce"] == 16 * 4          # start counted, done skipped
+    assert got["_counts"]["all-to-all"] == 1
+
+
+def test_probe_plan_covers_all_archs():
+    dr = _dry()
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        probes, comb = dr.probe_plan(cfg)
+        assert len(probes) >= 2
+        for p in probes:
+            assert p.num_layers <= cfg.num_layers
+        # linear extrapolation sanity: identical costs -> same total
+        c = {"flops": 10.0, "bytes": 4.0}
+        out = comb([c] * len(probes))
+        assert out["flops"] >= 10.0
+
+
+def test_probe_extrapolation_linear():
+    dr = _dry()
+    c1 = {"flops": 100.0, "coll_total": 10.0}
+    c2 = {"flops": 160.0, "coll_total": 13.0}
+    total = dr._lin(c1, c2, units=5)
+    assert total["flops"] == 100.0 + 60.0 * 4
+    assert total["coll_total"] == 10.0 + 3.0 * 4
+
+
+def test_input_specs_per_kind():
+    dr = _dry()
+    cfg = get_config("whisper-base")
+    tr = dr.input_specs(cfg, shape_by_name("train_4k"))
+    assert set(tr) == {"tokens", "labels", "frames"}
+    assert tr["tokens"].shape == (256, 4096)
+    de = dr.input_specs(cfg, shape_by_name("decode_32k"))
+    assert de["tokens"].shape == (128, 1)
+    vl = dr.input_specs(get_config("qwen2-vl-2b"), shape_by_name("train_4k"))
+    assert vl["mrope_positions"].shape == (3, 256, 4096)
+
+
+def test_cache_sharding_specs_decode_and_long():
+    dr = _dry()
+    sds = jax.ShapeDtypeStruct
+    # decode_32k KV leaf: (L, B, slots, KV, hd)
+    leaf = sds((40, 128, 32768, 8, 128), jnp.bfloat16)
+    spec = dr._cache_sharding_specs(
+        {"k": leaf}, batch=128, dp=("data",), seq_axes=("model",),
+        seq_len=32768)["k"]
+    assert spec[2] == "model" and spec[1] == "data"   # P() unwraps 1-tuples
+    # long_500k: batch 1, slots over data+model
+    leaf = sds((40, 1, 524288, 8, 128), jnp.bfloat16)
+    spec = dr._cache_sharding_specs(
+        {"k": leaf}, batch=1, dp=("data",), seq_axes=("data", "model"),
+        seq_len=524288)["k"]
+    assert spec[2] == ("data", "model")
+    # window cache (no seq dim): falls back to batch
+    leaf = sds((5, 128, 1024, 4, 256), jnp.bfloat16)
+    spec = dr._cache_sharding_specs(
+        {"k": leaf}, batch=128, dp=("data",), seq_axes=("model",),
+        seq_len=32768)["k"]
+    assert spec[1] == "data"
+
+
+def test_applicability_matrix():
+    skips = {(a, s.name) for a in ASSIGNED_ARCHS for s in ALL_SHAPES
+             if not applicable(get_config(a), s)[0]}
+    # exactly the pure full-attention archs skip long_500k
+    assert skips == {(a, "long_500k") for a in
+                     ["granite-3-2b", "minitron-8b", "phi3-medium-14b",
+                      "arctic-480b", "kimi-k2-1t-a32b", "whisper-base",
+                      "qwen2-vl-2b"]}
+
+
+def test_model_flops_accounting():
+    import importlib
+    roof = importlib.import_module("benchmarks.roofline")
+    mf_train = roof.model_flops("granite-3-2b", "train_4k", 256)
+    cfg = get_config("granite-3-2b")
+    expected = 6 * cfg.num_params() * 256 * 4096 / 256
+    assert abs(mf_train - expected) / expected < 1e-9
+    mf_dec = roof.model_flops("kimi-k2-1t-a32b", "decode_32k", 256)
+    cfgk = get_config("kimi-k2-1t-a32b")
+    assert abs(mf_dec - 2 * cfgk.num_active_params() * 128 / 256) < 1e-3 * mf_dec

@@ -1,0 +1,93 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import group_shrink as gs
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n,g,tm", [
+    (64, 32, 32, 4, 8),
+    (128, 64, 48, 6, 16),
+    (96, 128, 128, 3, 32),
+    (256, 64, 128, 16, 8),
+])
+def test_grouped_gemm_pallas_vs_ref(m, k, n, g, tm, dtype, rng):
+    sizes = rng.multinomial(m - 8, np.ones(g) / g).astype(np.int32)  # pad 8
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    w = jnp.asarray(rng.normal(size=(g, k, n)) * 0.1, dtype)
+    gsz = jnp.asarray(sizes)
+    out = ops.grouped_gemm(x, w, gsz, impl="pallas_interpret",
+                           tm=tm, tn=16, tk=16)
+    exp = ref.grouped_gemm_ref(x, w, gsz)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("impl", ["xla_ragged", "xla_dense"])
+def test_grouped_gemm_xla_impls(impl, rng):
+    m, k, n, g = 96, 32, 24, 5
+    sizes = np.array([10, 0, 40, 30, 16], np.int32)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(g, k, n)) * 0.1, jnp.float32)
+    out = ops.grouped_gemm(x, w, jnp.asarray(sizes), impl=impl,
+                           expert_capacity=48)
+    exp = ref.grouped_gemm_ref(x, w, jnp.asarray(sizes))
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_gemm_empty_groups(rng):
+    """Group-shrink guarantee: all-empty groups produce zeros + no NaN."""
+    m, k, n, g = 32, 16, 16, 4
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(g, k, n)), jnp.float32)
+    gsz = jnp.zeros((g,), jnp.int32)
+    out = ops.grouped_gemm(x, w, gsz, impl="pallas_interpret",
+                           tm=8, tn=8, tk=8)
+    assert np.allclose(out, 0)
+
+
+def test_tile_table_shrinks_inactive_groups():
+    sizes = jnp.array([16, 0, 0, 8, 0, 24], jnp.int32)
+    table = gs.build_tile_table(sizes, m=64, tm=8)
+    # active groups: 0 (2 tiles), 3 (1), 5 (3) -> 6 live tiles
+    assert int(table.num_tiles) == 6
+    live = np.asarray(table.tile_gid)[:6]
+    assert list(live) == [0, 0, 3, 5, 5, 5]
+    assert int(np.asarray(table.tile_valid).sum()) == 6
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,hd,s,ts", [
+    (2, 8, 2, 32, 64, 16),
+    (3, 4, 4, 64, 128, 32),
+    (1, 16, 8, 16, 32, 8),
+])
+def test_flash_decode_vs_ref(b, h, kv, hd, s, ts, dtype, rng):
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), dtype)
+    kc = jnp.asarray(rng.normal(size=(b, s, kv, hd)), dtype)
+    vc = jnp.asarray(rng.normal(size=(b, s, kv, hd)), dtype)
+    lengths = jnp.asarray(rng.integers(1, s + 1, size=b), jnp.int32)
+    out = ops.flash_decode(q, kc, vc, lengths, impl="pallas_interpret",
+                           ts=ts)
+    exp = ref.flash_decode_ref(q, kc, vc, lengths)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("t,k,d,tt,td", [(64, 2, 128, 16, 32),
+                                         (128, 8, 256, 32, 64)])
+def test_combine_vs_ref(t, k, d, tt, td, rng):
+    x = jnp.asarray(rng.normal(size=(t, k, d)), jnp.float32)
+    w = jnp.asarray(rng.random(size=(t, k)), jnp.float32)
+    out = ops.combine_weighted(x, w, impl="pallas_interpret", tt=tt, td=td)
+    exp = ref.combine_weighted_ref(x, w)
+    np.testing.assert_allclose(out, exp, rtol=1e-6, atol=1e-6)

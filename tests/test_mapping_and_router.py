@@ -1,0 +1,100 @@
+"""Mapping lookup (service discovery + failover) and router invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.core import mapping as emap
+from repro.core import router
+
+
+def test_lookup_primary_only():
+    table = emap.default_mapping(8, 4)          # e // 2
+    alive = jnp.ones((4,), bool)
+    eids = jnp.array([[0, 3], [5, 7]], jnp.int32)
+    salt = jnp.zeros_like(eids)
+    s = emap.lookup(jnp.asarray(table), alive, eids, salt)
+    np.testing.assert_array_equal(np.asarray(s), [[0, 1], [2, 3]])
+
+
+def test_lookup_failover_to_replica():
+    smap = emap.ExpertServerMap(emap.default_mapping(8, 4), 4)
+    smap.register_replica(0, 3)                 # expert 0 also on server 3
+    table, alive = smap.device_arrays()
+    eids = jnp.array([[0]], jnp.int32)
+    salt = jnp.zeros_like(eids)
+    assert int(emap.lookup(table, alive, eids, salt)[0, 0]) == 0
+    smap.mark_dead(0)                           # primary dies
+    table, alive = smap.device_arrays()
+    assert int(emap.lookup(table, alive, eids, salt)[0, 0]) == 3
+
+
+def test_lookup_spreads_over_replicas():
+    smap = emap.ExpertServerMap(emap.default_mapping(4, 2), 2)
+    smap.register_replica(0, 1)
+    table, alive = smap.device_arrays()
+    eids = jnp.zeros((16, 1), jnp.int32)
+    salt = jnp.arange(16, dtype=jnp.int32)[:, None]
+    s = np.asarray(emap.lookup(table, alive, eids, salt))[:, 0]
+    assert set(s) == {0, 1}
+    assert abs((s == 0).sum() - 8) <= 1          # ~uniform spread
+
+
+@settings(max_examples=25, deadline=None)
+@given(E=st.integers(2, 32), S=st.integers(1, 8), dead=st.integers(0, 3),
+       seed=st.integers(0, 99))
+def test_lookup_never_returns_dead(E, S, dead, seed):
+    E = (E // S + 1) * S                         # divisible
+    rng = np.random.default_rng(seed)
+    smap = emap.ExpertServerMap(emap.default_mapping(E, S), S)
+    for e in rng.integers(0, E, size=8):
+        s = int(rng.integers(0, S))
+        row = smap.table[e]
+        if s not in row[row >= 0] and (row < 0).any():
+            smap.register_replica(int(e), s)
+    kill = rng.choice(S, size=min(dead, S - 1), replace=False)
+    for s in kill:
+        smap.mark_dead(int(s))
+    table, alive = smap.device_arrays()
+    eids = jnp.asarray(rng.integers(0, E, size=(20, 2)), jnp.int32)
+    salt = jnp.asarray(rng.integers(0, 1000, size=(20, 2)), jnp.int32)
+    out = np.asarray(emap.lookup(table, alive, eids, salt))
+    counts = smap.alive_replica_count()
+    for (e, s) in zip(np.asarray(eids).reshape(-1), out.reshape(-1)):
+        if counts[e] > 0:
+            assert smap.alive[s], (e, s)
+
+
+# ----------------------------------------------------------------- router
+
+@pytest.mark.parametrize("score_fn", ["softmax", "sigmoid"])
+def test_router_topk(score_fn, rng):
+    cfg = MoEConfig(num_experts=16, top_k=4, d_expert=8,
+                    router_score_fn=score_fn)
+    params = router.init_router(jax.random.PRNGKey(0), 32, 16)
+    x = jnp.asarray(rng.normal(size=(10, 32)), jnp.float32)
+    out = router.route(params, x, cfg)
+    assert out.expert_ids.shape == (10, 4)
+    assert out.scores.shape == (10, 4)
+    # normalized scores sum to 1
+    np.testing.assert_allclose(np.asarray(out.scores).sum(-1), 1.0,
+                               rtol=1e-5)
+    # ids are unique per token and within range
+    ids = np.asarray(out.expert_ids)
+    assert (ids >= 0).all() and (ids < 16).all()
+    for row in ids:
+        assert len(set(row)) == len(row)
+    # selected experts have the highest probs
+    probs = np.asarray(out.full_probs)
+    for t in range(10):
+        thresh = probs[t, ids[t]].min()
+        assert (probs[t] <= thresh + 1e-6).sum() >= 16 - 4
+
+
+def test_router_load_stat(rng):
+    ids = jnp.asarray(rng.integers(0, 8, size=(100, 2)), jnp.int32)
+    load = router.expert_load(ids, 8)
+    assert int(load.sum()) == 200

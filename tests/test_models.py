@@ -1,0 +1,144 @@
+"""Model substrate: attention paths, SSM equivalences, caches, RoPE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as attn
+from repro.models import kv_cache as kvc
+from repro.models import mamba, rope, rwkv
+
+
+# ------------------------------------------------------------- attention
+
+def test_chunked_attention_matches_dense(rng):
+    cfg = get_config("granite-3-2b").reduced()
+    p = attn.init_attention(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(2, 2048, cfg.d_model)) * 0.1,
+                    jnp.float32)
+    pos = jnp.arange(2048, dtype=jnp.int32)
+    o_chunk = attn.full_attention(p, cfg, x, pos)          # >= threshold
+    old = attn.CHUNKED_ATTN_THRESHOLD
+    try:
+        attn.CHUNKED_ATTN_THRESHOLD = 10 ** 9
+        o_dense = attn.full_attention(p, cfg, x, pos)
+    finally:
+        attn.CHUNKED_ATTN_THRESHOLD = old
+    np.testing.assert_allclose(o_chunk, o_dense, rtol=1e-5, atol=1e-5)
+
+
+def test_sliding_window_mask(rng):
+    cfg = get_config("gemma3-4b").reduced()
+    p = attn.init_attention(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(1, 128, cfg.d_model)) * 0.1, jnp.float32)
+    pos = jnp.arange(128, dtype=jnp.int32)
+    o_local = attn.full_attention(p, cfg, x, pos, is_local=True)
+    o_global = attn.full_attention(p, cfg, x, pos, is_local=False)
+    # early tokens (within the window of everything) agree; late differ
+    w = cfg.sliding_window
+    np.testing.assert_allclose(o_local[:, :w // 2], o_global[:, :w // 2],
+                               rtol=1e-4, atol=1e-4)
+    assert not np.allclose(o_local[:, -1], o_global[:, -1])
+
+
+def test_decode_matches_full(rng):
+    cfg = get_config("phi3-medium-14b").reduced()
+    p = attn.init_attention(jax.random.PRNGKey(0), cfg)
+    S = 16
+    x = jnp.asarray(rng.normal(size=(2, S, cfg.d_model)) * 0.2, jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    o_full, (k, v) = attn.full_attention(p, cfg, x, pos, return_kv=True)
+    cache = kvc.init_kv_cache(2, S + 4, cfg.num_kv_heads, cfg.head_dim,
+                              jnp.float32)
+    cache = kvc.write_prefill(cache, k[:, :-1], v[:, :-1])
+    o_dec, cache = attn.decode_attention(p, cfg, x[:, -1:], cache)
+    np.testing.assert_allclose(np.asarray(o_dec[:, 0]),
+                               np.asarray(o_full[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ring_buffer_window_cache(rng):
+    cache = kvc.init_kv_cache(1, 100, 2, 4, jnp.float32, window=8)
+    assert cache.k.shape[1] == 8
+    for t in range(20):
+        k = jnp.full((1, 1, 2, 4), float(t))
+        cache = kvc.append_decode(cache, k, k)
+    assert int(cache.length[0]) == 20
+    assert np.asarray(kvc.valid_mask(cache)).all()        # ring full
+    # slots hold the last 8 tokens (12..19) in ring order
+    vals = sorted(set(np.asarray(cache.k)[0, :, 0, 0].tolist()))
+    assert vals == [float(v) for v in range(12, 20)]
+
+
+# ------------------------------------------------------------------ rope
+
+def test_rope_relative_shift_invariance():
+    """RoPE: scores depend only on relative positions."""
+    hd = 32
+    q = jnp.ones((1, 1, 1, hd))
+    k = jnp.ones((1, 1, 1, hd)) * 0.5
+    def score(p_q, p_k):
+        cq, sq = rope.rope_cos_sin(jnp.array([[p_q]]), hd, 10000.0)
+        ck, sk = rope.rope_cos_sin(jnp.array([[p_k]]), hd, 10000.0)
+        qr = rope.apply_rope(q, cq, sq)
+        kr = rope.apply_rope(k, ck, sk)
+        return float(jnp.sum(qr * kr))
+    assert abs(score(5, 3) - score(105, 103)) < 1e-4
+    assert abs(score(5, 3) - score(6, 3)) > 1e-6
+
+
+def test_mrope_text_equals_rope():
+    """With equal t/h/w positions M-RoPE must reduce to standard RoPE."""
+    hd, theta = 32, 10000.0
+    pos = jnp.arange(8, dtype=jnp.int32)[None]
+    c1, s1 = rope.rope_cos_sin(pos, hd, theta)
+    pos3 = rope.text_mrope_positions(pos)
+    c2, s2 = rope.mrope_cos_sin(pos3, hd, theta, (4, 6, 6))
+    np.testing.assert_allclose(c1, c2, rtol=1e-6)
+    np.testing.assert_allclose(s1, s2, rtol=1e-6)
+
+
+# ------------------------------------------------------------------- ssm
+
+def test_mamba_chunked_equals_scan(rng):
+    cfg = get_config("zamba2-2.7b").reduced()
+    params = mamba.init_mamba(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(2, 32, cfg.d_model)), jnp.float32)
+    y1, s1 = mamba.mamba_forward(params, cfg, x, chunk=8)
+    y2, s2 = mamba.mamba_forward(params, cfg, x, use_ref_scan=True)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s1.ssm, s2.ssm, rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_decode_consistency(rng):
+    cfg = get_config("zamba2-2.7b").reduced()
+    params = mamba.init_mamba(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(1, 16, cfg.d_model)), jnp.float32)
+    y_full, _ = mamba.mamba_forward(params, cfg, x, chunk=8)
+    st = None
+    y_pre, st = mamba.mamba_forward(params, cfg, x[:, :-1], use_ref_scan=True)
+    y_dec, _ = mamba.mamba_decode(params, cfg, x[:, -1:], st)
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]),
+                               np.asarray(y_full[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv_forward_equals_decode(rng):
+    cfg = get_config("rwkv6-7b").reduced()
+    tp = rwkv.init_rwkv_tmix(jax.random.PRNGKey(0), cfg)
+    cp = rwkv.init_rwkv_cmix(jax.random.PRNGKey(1), cfg)
+    norms = (jnp.ones((cfg.d_model,)), jnp.ones((cfg.d_model,)))
+    x = jnp.asarray(rng.normal(size=(2, 12, cfg.d_model)) * 0.3, jnp.float32)
+    st = rwkv.init_rwkv_state(cfg, 2)
+    y_full, _ = rwkv.rwkv_block_forward(tp, cp, cfg, x, st, norms, chunk=4)
+    st2 = rwkv.init_rwkv_state(cfg, 2)
+    ys = []
+    for t in range(12):
+        y_t, st2 = rwkv.rwkv_block_decode(tp, cp, cfg, x[:, t:t + 1], st2,
+                                          norms)
+        ys.append(y_t)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(ys, 1)),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,136 @@
+"""EaasMoELayer end-to-end: vs a direct dense-MoE oracle, replication
+invariance, failover correctness, monolithic equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import expert_server, moe_layer as eaas
+from repro.core.monolithic import (init_monolithic_ep, monolithic_ep_apply,
+                                   monolithic_runtime)
+from repro.core import load_balance, mapping as emap
+
+
+def _setup(S=4, n_red=0, seed=0, redundant_table=None):
+    cfg = get_config("kimi-k2-1t-a32b").reduced()   # 8 experts top-2 +shared
+    key = jax.random.PRNGKey(seed)
+    params = eaas.init_eaas_moe(key, cfg, S, redundant_table=redundant_table)
+    T = 24
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (T, cfg.d_model), jnp.float32) * 0.3
+    rt = eaas.default_runtime(cfg, S, T, redundant_table=redundant_table)
+    rt = rt._replace(capacity=T * cfg.moe.top_k, gemm_impl="xla_ragged")
+    return cfg, params, x, rt
+
+
+def _dense_oracle(cfg, params, x):
+    """sum_k score_k · expert_k(x) + shared — no dispatch machinery."""
+    from repro.core import router
+    from repro.models.mlp import mlp
+
+    m = cfg.moe
+    r = router.route(params["router"], x, m)
+    # reassemble the global expert bank from per-server primaries
+    S, L = params["servers"]["w_gate"].shape[:2]
+    per = m.num_experts // S
+    wg = params["servers"]["w_gate"][:, :per].reshape(m.num_experts, *params["servers"]["w_gate"].shape[2:])
+    wu = params["servers"]["w_up"][:, :per].reshape(m.num_experts, *params["servers"]["w_up"].shape[2:])
+    wd = params["servers"]["w_down"][:, :per].reshape(m.num_experts, *params["servers"]["w_down"].shape[2:])
+    out = jnp.zeros_like(x)
+    for t in range(x.shape[0]):
+        acc = jnp.zeros((x.shape[1],), jnp.float32)
+        for j in range(m.top_k):
+            e = int(r.expert_ids[t, j])
+            h = jax.nn.silu(x[t] @ wg[e]) * (x[t] @ wu[e])
+            acc = acc + r.scores[t, j] * (h @ wd[e])
+        out = out.at[t].set(acc.astype(x.dtype))
+    if "shared" in params:
+        out = out + mlp(params["shared"], x, cfg.activation)
+    return out
+
+
+def test_eaas_matches_dense_oracle():
+    cfg, params, x, rt = _setup(S=4)
+    y, stats = eaas.eaas_moe_apply(params, x, cfg.moe, rt,
+                                   activation=cfg.activation)
+    y_ref = _dense_oracle(cfg, params, x)
+    assert int(stats.dropped) == 0 and int(stats.miss) == 0
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_replicas_do_not_change_output():
+    """Replicated experts are bit-equivalent services: adding replicas (and
+    spreading traffic over them) must not change the math."""
+    cfg, params0, x, rt0 = _setup(S=4)
+    y0, _ = eaas.eaas_moe_apply(params0, x, cfg.moe, rt0,
+                                activation=cfg.activation)
+    E, S = cfg.moe.num_experts, 4
+    mapping, red = load_balance.eplb_plan(np.ones(E), S, n_redundant=2)
+    cfg2, params2, x2, rt2 = _setup(S=4, redundant_table=red)
+    # copy the SAME bank weights into the replicated layout
+    for k in ("w_gate", "w_up", "w_down"):
+        per = E // S
+        bank = params0["servers"][k][:, :per].reshape(
+            E, *params0["servers"][k].shape[2:])
+        params2["servers"][k] = expert_server.build_server_weights(
+            {"w_gate": bank, "w_up": bank, "w_down": bank}, S, red)[k]
+    params2["router"] = params0["router"]
+    if "shared" in params0:
+        params2["shared"] = params0["shared"]
+    rt2 = rt2._replace(mapping=jnp.asarray(mapping))
+    y2, st2 = eaas.eaas_moe_apply(params2, x, cfg.moe, rt2,
+                                  activation=cfg.activation)
+    assert int(st2.miss) == 0
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_failover_preserves_output():
+    """Killing a server whose experts all have live replicas must leave the
+    output unchanged (transparent failover, paper §3.4)."""
+    E, S = 8, 4
+    # give EVERY expert a replica on (primary+1) % S
+    mapping = emap.default_mapping(E, S, max_replicas=2)
+    red = np.zeros((S, 2), np.int32) - 1
+    per = E // S
+    for e in range(E):
+        p = mapping[e, 0]
+        q = (p + 1) % S
+        slot = np.argmax(red[q] < 0)
+        red[q, slot] = e
+        mapping[e, 1] = q
+    cfg, params, x, rt = _setup(S=S, redundant_table=red)
+    rt = rt._replace(mapping=jnp.asarray(mapping))
+    y_before, st_b = eaas.eaas_moe_apply(params, x, cfg.moe, rt,
+                                         activation=cfg.activation)
+    rt_dead = rt._replace(alive=rt.alive.at[2].set(False))
+    y_after, st_a = eaas.eaas_moe_apply(params, x, cfg.moe, rt_dead,
+                                        activation=cfg.activation)
+    assert int(st_a.miss) == 0
+    np.testing.assert_allclose(np.asarray(y_before), np.asarray(y_after),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_monolithic_ep_equivalent_when_healthy():
+    """EAAS degenerates exactly to monolithic EP with a primary-only map."""
+    cfg, params, x, rt = _setup(S=4)
+    y_eaas, _ = eaas.eaas_moe_apply(params, x, cfg.moe, rt,
+                                    activation=cfg.activation)
+    rt_mono = monolithic_runtime(cfg, 4, x.shape[0], "xla_ragged")
+    rt_mono = rt_mono._replace(capacity=rt.capacity)
+    y_mono, _ = monolithic_ep_apply(params, x, cfg, rt_mono)
+    np.testing.assert_allclose(np.asarray(y_eaas), np.asarray(y_mono),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_miss_counted_on_inconsistent_mapping():
+    """Routing to a server that does not host the expert is counted."""
+    cfg, params, x, rt = _setup(S=4)
+    bad = rt.mapping.at[:, 0].set((rt.mapping[:, 0] + 1) % 4)
+    rt_bad = rt._replace(mapping=bad)
+    _, stats = eaas.eaas_moe_apply(params, x, cfg.moe, rt_bad,
+                                   activation=cfg.activation)
+    assert int(stats.miss) == x.shape[0] * cfg.moe.top_k

@@ -1,0 +1,106 @@
+"""Hypothesis property tests on the kernel-layer invariants.
+
+* grouped GEMM (pallas interpret + xla impls) == oracle for arbitrary group
+  size vectors, including empty groups and padding rows;
+* group-shrink tile tables: live tiles exactly cover the active groups in
+  order, inactive groups contribute zero tiles;
+* pad/unpad round-trips rows exactly.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import group_shrink as gs
+from repro.kernels import ops, ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(g=st.integers(1, 8), seed=st.integers(0, 10_000),
+       impl=st.sampled_from(["pallas_interpret", "xla_ragged", "xla_dense"]))
+def test_grouped_gemm_random_groups(g, seed, impl):
+    rng = np.random.default_rng(seed)
+    m, k, n, tm = 64, 16, 16, 8
+    # random sizes, possibly summing under m (padding rows at the tail)
+    sizes = rng.multinomial(rng.integers(0, m + 1), np.ones(g) / g)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = (rng.normal(size=(g, k, n)) * 0.1).astype(np.float32)
+    kw = dict(tm=tm, tn=8, tk=8) if impl == "pallas_interpret" else {}
+    out = ops.grouped_gemm(jnp.asarray(x), jnp.asarray(w),
+                           jnp.asarray(sizes.astype(np.int32)), impl=impl,
+                           expert_capacity=m, **kw)
+    exp = ref.grouped_gemm_ref(jnp.asarray(x), jnp.asarray(w),
+                               jnp.asarray(sizes.astype(np.int32)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(g=st.integers(1, 16), tm=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 10_000))
+def test_tile_table_invariants(g, tm, seed):
+    rng = np.random.default_rng(seed)
+    m = 128
+    sizes = rng.multinomial(rng.integers(0, m + 1), np.ones(g) / g).astype(
+        np.int32)
+    table = gs.build_tile_table(jnp.asarray(sizes), m, tm)
+    tiles_per = -(-sizes // tm)                    # ceil
+    total = int(tiles_per.sum())
+    # live count matches the prefix-scan compaction
+    assert int(table.num_tiles) == total
+    valid = np.asarray(table.tile_valid).astype(bool)
+    assert valid.sum() == total
+    assert not valid[total:].any()                 # dead tail only
+    # live tiles cover active groups, contiguously and in order
+    gids = np.asarray(table.tile_gid)[:total]
+    expect = np.repeat(np.arange(g), tiles_per)
+    np.testing.assert_array_equal(gids, expect)
+    # padded offsets are tile-aligned and monotone
+    off = np.asarray(table.padded_offset)
+    assert (off % tm == 0).all()
+    assert (np.diff(off) >= 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(g=st.integers(1, 8), seed=st.integers(0, 10_000))
+def test_pad_unpad_roundtrip(g, seed):
+    rng = np.random.default_rng(seed)
+    m, k, tm = 64, 4, 8
+    sizes = rng.multinomial(rng.integers(0, m + 1), np.ones(g) / g).astype(
+        np.int32)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    table = gs.build_tile_table(jnp.asarray(sizes), m, tm)
+    xp, idx, live = gs.pad_rows_to_tiles(jnp.asarray(x), jnp.asarray(sizes),
+                                         table, tm)
+    back = gs.unpad_rows(xp, idx, live)
+    n_live = int(sizes.sum())
+    np.testing.assert_allclose(np.asarray(back)[:n_live], x[:n_live],
+                               rtol=0, atol=0)
+    assert np.allclose(np.asarray(back)[n_live:], 0)   # padding rows zeroed
+    # padded positions are unique among live rows
+    idx_np = np.asarray(idx)[:n_live]
+    assert len(np.unique(idx_np)) == n_live
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 3), kv=st.sampled_from([1, 2, 4]),
+       s=st.sampled_from([16, 32]), seed=st.integers(0, 1000))
+def test_flash_decode_property(b, kv, s, seed):
+    rng = np.random.default_rng(seed)
+    h, hd, ts = kv * 2, 16, 8
+    q = rng.normal(size=(b, h, hd)).astype(np.float32)
+    kc = rng.normal(size=(b, s, kv, hd)).astype(np.float32)
+    vc = rng.normal(size=(b, s, kv, hd)).astype(np.float32)
+    lengths = rng.integers(1, s + 1, size=b).astype(np.int32)
+    out = ops.flash_decode(jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc),
+                           jnp.asarray(lengths), impl="pallas_interpret",
+                           ts=ts)
+    exp = ref.flash_decode_ref(jnp.asarray(q), jnp.asarray(kc),
+                               jnp.asarray(vc), jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+    # outputs are convex combinations of V rows => bounded by V's range
+    for i in range(b):
+        lo = vc[i, :lengths[i]].min() - 1e-4
+        hi = vc[i, :lengths[i]].max() + 1e-4
+        assert np.asarray(out)[i].min() >= lo and np.asarray(out)[i].max() <= hi

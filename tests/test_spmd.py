@@ -1,0 +1,140 @@
+"""SPMD numerical equivalence, run in subprocesses with 8 forced host
+devices (the main pytest process must keep the real single-device view).
+
+Checks:
+* the EAAS MoE shard_map island (a2a mode) == the local single-device layer;
+* the replicated decode mode == local;
+* sequence-parallel decode attention == single-device decode attention.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = REPO_SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, f"STDOUT:{out.stdout}\nSTDERR:{out.stderr}"
+    return out.stdout
+
+
+COMMON = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.configs import get_config
+from repro.core.moe_layer import default_runtime
+from repro.models.transformer import ParallelCtx, build_model, _moe_apply
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = get_config("kimi-k2-1t-a32b").reduced()
+model = build_model(cfg, num_servers=4)
+params = model.init_params(jax.random.PRNGKey(0))
+moe_p = jax.tree.map(lambda x: x, params["blocks"]["moe"])
+layer0 = jax.tree.map(lambda x: x[0], moe_p)     # one layer's MoE params
+T = 64
+x = jax.random.normal(jax.random.PRNGKey(1), (T, cfg.d_model), jnp.float32) * 0.3
+rt = default_runtime(cfg, 4, T)._replace(capacity=T * cfg.moe.top_k,
+                                         gemm_impl="xla_ragged")
+ctx_local = ParallelCtx(moe_runtime=rt, remat=False)
+y_local, st_local = _moe_apply(layer0, x, cfg, ctx_local)
+"""
+
+
+def test_moe_island_a2a_matches_local():
+    out = _run(COMMON + """
+ctx = ParallelCtx(mesh=mesh, axis_data=("data",), moe_runtime=rt,
+                  moe_mode="a2a", remat=False)
+y, st = jax.jit(lambda p, xx: _moe_apply(p, xx, cfg, ctx))(layer0, x)
+err = float(jnp.max(jnp.abs(y - y_local)))
+assert err < 2e-4, err
+assert int(st.miss) == 0
+assert int(st.dropped) == 0
+print("A2A OK", err)
+""")
+    assert "A2A OK" in out
+
+
+def test_moe_island_replicated_matches_local():
+    out = _run(COMMON + """
+ctx = ParallelCtx(mesh=mesh, axis_data=("data",), moe_runtime=rt,
+                  moe_mode="replicated", remat=False)
+y, st = jax.jit(lambda p, xx: _moe_apply(p, xx, cfg, ctx))(layer0, x)
+err = float(jnp.max(jnp.abs(y - y_local)))
+assert err < 2e-4, err
+assert int(st.miss) == 0
+print("REPL OK", err)
+""")
+    assert "REPL OK" in out
+
+
+def test_moe_island_failover_under_spmd():
+    """Kill a server ON THE MESH: output only changes by dropped experts'
+    share when no replicas exist; with replicas it is identical."""
+    out = _run(COMMON + """
+import numpy as _np
+from repro.core import load_balance, expert_server
+E, S = cfg.moe.num_experts, 4
+mapping, red = load_balance.eplb_plan(_np.ones(E), S, n_redundant=E // S,
+                                      max_replicas=2)
+local = expert_server.make_local_table(E, S, red)
+per = E // S
+bank = {k: layer0["servers"][k][:, :per].reshape(E, *layer0["servers"][k].shape[2:])
+        for k in ("w_gate", "w_up", "w_down")}
+layer0["servers"].update(expert_server.build_server_weights(bank, S, red))
+rt2 = rt._replace(mapping=jnp.asarray(mapping), local_table=jnp.asarray(local))
+ctx = ParallelCtx(mesh=mesh, axis_data=("data",), moe_runtime=rt2,
+                  moe_mode="a2a", remat=False)
+y_ok, st_ok = jax.jit(lambda p, xx: _moe_apply(p, xx, cfg, ctx))(layer0, x)
+rt3 = rt2._replace(alive=rt2.alive.at[1].set(False))
+ctx3 = ParallelCtx(mesh=mesh, axis_data=("data",), moe_runtime=rt3,
+                   moe_mode="a2a", remat=False)
+y_dead, st_dead = jax.jit(lambda p, xx: _moe_apply(p, xx, cfg, ctx3))(layer0, x)
+assert int(st_dead.miss) == 0
+err = float(jnp.max(jnp.abs(y_ok - y_dead)))
+assert err < 2e-4, err
+print("FAILOVER OK", err)
+""")
+    assert "FAILOVER OK" in out
+
+
+def test_sp_decode_attention_matches_local():
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.models import attention as attn, kv_cache as kvc
+from repro.models.transformer import ParallelCtx, _sp_decode_attention
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+cfg = get_config("granite-3-2b").reduced()
+p = attn.init_attention(jax.random.PRNGKey(0), cfg)
+B, SLOTS = 1, 64
+cache = kvc.init_kv_cache(B, SLOTS, cfg.num_kv_heads, cfg.head_dim,
+                          jnp.float32)
+# fill 37 tokens
+ks = jax.random.normal(jax.random.PRNGKey(1), (B, 37, cfg.num_kv_heads,
+                                               cfg.head_dim), jnp.float32)
+cache = kvc.write_prefill(cache, ks, ks * 0.5)
+x = jax.random.normal(jax.random.PRNGKey(2), (B, 1, cfg.d_model),
+                      jnp.float32) * 0.3
+y_ref, cache_ref = attn.decode_attention(p, cfg, x, cache)
+ctx = ParallelCtx(mesh=mesh, axis_data=("data",), seq_shard_cache=True)
+y_sp, cache_sp = jax.jit(lambda pp, xx, cc: _sp_decode_attention(
+    pp, cfg, xx, cc, ctx))(p, x, cache)
+err = float(jnp.max(jnp.abs(y_sp - y_ref)))
+assert err < 2e-4, err
+kerr = float(jnp.max(jnp.abs(cache_sp.k - cache_ref.k)))
+assert kerr < 1e-5, kerr
+print("SP OK", err)
+""")
+    assert "SP OK" in out
