@@ -10,7 +10,8 @@ from typing import Dict, Iterable, List, Optional
 import numpy as np
 
 from repro.configs import get_config
-from repro.serving import EngineConfig, Request, SamplingParams, ServingEngine
+from repro.serving import (EngineConfig, Request, SamplingParams, Scenario,
+                           ServingEngine, VirtualClock, WallClock)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                            "bench")
@@ -28,9 +29,23 @@ def make_requests(n: int, prompt_len: int = 8, max_new: int = 16,
         np.int32), SamplingParams(max_new_tokens=max_new)) for i in range(n)]
 
 
+def make_clock(kind="wall"):
+    """Benchmark time base: "wall" (real step times, relative CPU curves),
+    "virtual" (deterministic analytic model — same numbers every run), or a
+    ready-made Clock instance (custom virtual cost constants)."""
+    if kind == "wall":
+        return WallClock()
+    if kind == "virtual":
+        return VirtualClock()
+    if hasattr(kind, "stop"):
+        return kind
+    raise ValueError(kind)
+
+
 def run_engine(cfg, ecfg: EngineConfig, requests: Iterable[Request],
-               on_step=None, warmup: bool = True, seed: int = 0):
-    eng = ServingEngine(cfg, ecfg, seed=seed)
+               on_step=None, warmup: bool = True, seed: int = 0,
+               clock: str = "wall"):
+    eng = ServingEngine(cfg, ecfg, seed=seed, clock=make_clock(clock))
     if warmup:  # compile prefill+decode outside the measured window
         w = make_requests(1, prompt_len=8, max_new=2, vocab=cfg.vocab_size,
                           seed=99)[0]
@@ -44,6 +59,15 @@ def run_engine(cfg, ecfg: EngineConfig, requests: Iterable[Request],
         eng.submit(r)
     metrics = eng.run(max_steps=20_000, on_step=on_step)
     return eng, metrics
+
+
+def run_scenario(cfg, ecfg: EngineConfig, scenario: Scenario, seed: int = 0,
+                 clock: str = "virtual", max_steps: int = 20_000):
+    """Replay a scripted scenario on a fresh engine (scenario-driven
+    benchmarks: one parameterized sweep instead of hand-rolled loops)."""
+    eng = ServingEngine(cfg, ecfg, seed=seed, clock=make_clock(clock))
+    res = scenario.run(eng, max_steps=max_steps)
+    return eng, res
 
 
 def save_result(name: str, payload: Dict) -> str:

@@ -1,54 +1,71 @@
 """Paper Fig. 10 — decoding throughput under repeated server failures.
 
-Failures are injected one at a time (with recovery between them, as in the
-paper's experiment: 10 sequential GPU failures).  EAAS reroutes to replicas
-(expected <2% throughput loss); monolithic EP halts for a full group
-restart; TP halts one unit.
+Thin driver over the scenario harness (``repro.serving.scenario``): one
+scripted fail/recover timeline replayed across all three engine modes
+(EAAS / monolithic EP / TP) under saturating traffic.  Failures are
+injected one at a time with recovery between them, as in the paper's
+experiment (10 sequential GPU failures).  EAAS reroutes to replicas
+(throughput dips only by the lost compute share); monolithic EP halts for
+a full group restart; TP halts one unit but its weight replication caps
+the batch.
+
+Runs under the virtual clock by default — deterministic, CPU-fast, and
+reproducible bit-for-bit (pass ``clock="wall"`` for real step timing).
 """
 
 from __future__ import annotations
 
 from typing import Dict, List
 
-from benchmarks.common import (bench_model_cfg, csv_row, make_requests,
-                               run_engine, save_result)
-from repro.serving import EngineConfig
+from benchmarks.common import (bench_model_cfg, csv_row, run_scenario,
+                               save_result)
+from repro.serving import EngineConfig, Scenario
+
+MODES = ("eaas", "monolithic_ep", "tp")
 
 
-def run(n_failures: int = 4, load: int = 24, max_new: int = 16) -> Dict:
+def _engine_cfg(mode: str) -> EngineConfig:
+    return EngineConfig(mode=mode, num_servers=4, max_batch=4, max_seq=64,
+                        tp_batch_cap=2, n_redundant=2, restart_steps=40,
+                        tp_restart_steps=10)
+
+
+def _scenario(rate: float, horizon: float, max_new: int, vocab: int,
+              n_failures: int = 0, period: float = 0.1,
+              num_servers: int = 4) -> Scenario:
+    """Saturating Poisson traffic; every ``period`` one server fails and
+    recovers halfway through (ranks cycle over the whole pool)."""
+    sc = Scenario(horizon=horizon, seed=0, max_new=max_new, vocab=vocab)
+    sc.poisson(rate)
+    for i in range(n_failures):
+        t0 = 0.05 + period * i
+        sc.fail(rank=i % num_servers, t=t0)
+        sc.recover(rank=i % num_servers, t=t0 + period / 2)
+    return sc
+
+
+def run(n_failures: int = 4, rate: float = 300.0, max_new: int = 16,
+        clock: str = "virtual") -> Dict:
     cfg = bench_model_cfg()
-    out = {"figure": "fig10_fault_tolerance", "modes": {}}
+    horizon = 0.05 + 0.1 * n_failures + 0.05
+    out = {"figure": "fig10_fault_tolerance", "clock": clock, "modes": {}}
 
-    baseline = {}
-    for mode in ("eaas", "monolithic_ep", "tp"):
-        ecfg = EngineConfig(mode=mode, num_servers=4, max_batch=4,
-                            max_seq=64, tp_batch_cap=2, n_redundant=2)
-        reqs = make_requests(load, max_new=max_new, vocab=cfg.vocab_size)
-        _, m = run_engine(cfg, ecfg, reqs)
-        baseline[mode] = m.decode_throughput
-
-    for mode in ("eaas", "monolithic_ep", "tp"):
-        ecfg = EngineConfig(mode=mode, num_servers=4, max_batch=4,
-                            max_seq=64, tp_batch_cap=2, n_redundant=2,
-                            restart_steps=40, tp_restart_steps=10)
-        reqs = make_requests(load, max_new=max_new, vocab=cfg.vocab_size)
-        fail_steps = {10 + 30 * i: i % 3 for i in range(n_failures)}
-        recover_steps = {25 + 30 * i: i % 3 for i in range(n_failures)}
-
-        def on_step(eng):
-            if eng.step_idx in fail_steps:
-                eng.inject_server_failure(fail_steps[eng.step_idx])
-            if eng.step_idx in recover_steps:
-                eng.recover_server(recover_steps[eng.step_idx])
-
-        _, m = run_engine(cfg, ecfg, reqs, on_step=on_step)
-        thr = m.decode_throughput
+    for mode in MODES:
+        _, base = run_scenario(
+            cfg, _engine_cfg(mode),
+            _scenario(rate, horizon, max_new, cfg.vocab_size), clock=clock)
+        _, fail = run_scenario(
+            cfg, _engine_cfg(mode),
+            _scenario(rate, horizon, max_new, cfg.vocab_size,
+                      n_failures=n_failures), clock=clock)
+        thr0 = base.metrics.decode_throughput
+        thr1 = fail.metrics.decode_throughput
         out["modes"][mode] = {
-            "baseline_tok_per_s": baseline[mode],
-            "under_failures_tok_per_s": thr,
-            "throughput_drop_pct": 100 * (1 - thr / max(baseline[mode],
-                                                        1e-9)),
-            "timeline": m.timeline[:200],
+            "baseline_tok_per_s": thr0,
+            "under_failures_tok_per_s": thr1,
+            "throughput_drop_pct": 100 * (1 - thr1 / max(thr0, 1e-9)),
+            "curve": fail.metrics.throughput_curve(bin_width=0.02),
+            "timeline": fail.metrics.timeline[:200],
         }
     save_result("fig10_fault_tolerance", out)
     return out

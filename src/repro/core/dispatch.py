@@ -6,7 +6,9 @@ Two packing algorithms (both produce identical buffers):
 * ``method="sort"``   — stable sort by destination server, O(Tk log Tk).
 * ``method="onehot"`` — cumsum-of-onehot ranking, O(Tk · S); no sort, better
   on the VPU when S is small (it is: S = model-axis size, 16).  This is a
-  beyond-paper optimization knob explored in EXPERIMENTS.md §Perf.
+  beyond-paper optimization knob; the two methods' buffer-for-buffer
+  equivalence is pinned down in tests/test_dispatch.py (property form) and
+  tests/test_scenario.py (hypothesis-free form).
 
 Capacity semantics follow the paper's fixed-size buffer slots: at most
 ``capacity`` tokens per (client, server) pair per layer; overflow tokens are

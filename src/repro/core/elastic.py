@@ -71,6 +71,38 @@ class ServerPool:
         self.smap.alive = alive
         self.redundant_table = red
 
+    # ------------------------------------------------------------- elastic
+    def feasible_counts(self) -> List[int]:
+        """Pool sizes the block-contiguous primary layout supports (E % n == 0)."""
+        E = self.cfg.moe.num_experts
+        return [n for n in range(1, E + 1) if E % n == 0]
+
+    def scale_to(self, n: int) -> None:
+        """Grow/shrink the logical pool to ``n`` servers (paper §5.3).
+
+        Re-plans the EPLB mapping for the new size from the traffic EMA
+        (uniform load when no traffic has been observed yet) and preserves
+        the liveness mask of surviving ranks; newly added ranks start
+        alive.  The caller owns the weight path — see
+        :func:`repro.core.expert_server.reshard_server_weights`.
+        """
+        E = self.cfg.moe.num_experts
+        if E % n:
+            raise ValueError(
+                f"cannot scale to {n} servers: {E} experts need E % n == 0 "
+                f"(feasible: {self.feasible_counts()})")
+        if n == self.num_servers:
+            return
+        load = self.stats.ema if self.stats.ema is not None else np.ones(E)
+        mapping, red = load_balance.eplb_plan(
+            load, n, self.n_redundant, self.max_replicas)
+        old_alive = self.smap.alive
+        self.num_servers = n
+        self.smap = ExpertServerMap(mapping, n)
+        k = min(len(old_alive), n)
+        self.smap.alive[:k] = old_alive[:k]
+        self.redundant_table = red
+
     # ------------------------------------------------------------ runtime
     def runtime(self, gemm_impl: str = "auto") -> MoERuntime:
         from repro.core import expert_server

@@ -55,6 +55,21 @@ def init_expert_weights(key, cfg: ModelConfig) -> Dict:
     }
 
 
+def _layout_ids(num_experts: int, num_servers: int,
+                redundant_table: np.ndarray) -> np.ndarray:
+    """(S, L) local-slot → global-expert-id layout (-1 = empty slot).
+
+    Slots 0..E/S-1 are the block-contiguous primaries; the rest mirror
+    ``redundant_table``.
+    """
+    E, S = num_experts, num_servers
+    per = E // S
+    assert per * S == E, (E, S)
+    primary_ids = np.arange(E, dtype=np.int32).reshape(S, per)
+    red = np.asarray(redundant_table, np.int32)              # (S, n_red)
+    return np.concatenate([primary_ids, red], axis=1)        # (S, L)
+
+
 def make_local_table(num_experts: int, num_servers: int,
                      redundant_table: np.ndarray) -> np.ndarray:
     """(S, E) global-expert-id → local-slot lookup (-1 = not hosted).
@@ -64,11 +79,7 @@ def make_local_table(num_experts: int, num_servers: int,
     rebalancing rewrites it without touching the compiled program.
     """
     E, S = num_experts, num_servers
-    per = E // S
-    assert per * S == E
-    primary_ids = np.arange(E, dtype=np.int32).reshape(S, per)
-    red = np.asarray(redundant_table, np.int32)              # (S, n_red)
-    local_ids = np.concatenate([primary_ids, red], axis=1)   # (S, L)
+    local_ids = _layout_ids(E, S, redundant_table)
     local_table = np.full((S, E), -1, np.int32)
     for s in range(S):
         for slot, e in enumerate(local_ids[s]):
@@ -105,6 +116,47 @@ def build_server_weights(bank: Dict, num_servers: int,
         "w_up": per_server(bank["w_up"]),
         "w_down": per_server(bank["w_down"]),
     }
+
+
+def extract_bank(server_w: Dict, num_experts: int) -> Dict:
+    """Recover the global (…, E, d, f) expert bank from per-server arrays.
+
+    Inverse of :func:`build_server_weights` restricted to the primary slots
+    (which are block-contiguous and never move — redundant slots are mere
+    copies).  Accepts arbitrary leading dims (e.g. a scan-stacked layer
+    axis): (…, S, L, d, f) → (…, E, d, f).
+    """
+    def un_shard(w):
+        *lead, S, L, a, b = w.shape
+        per = num_experts // S
+        assert per * S == num_experts, (num_experts, S)
+        return w[..., :per, :, :].reshape(*lead, num_experts, a, b)
+
+    return {k: un_shard(v) for k, v in server_w.items()}
+
+
+def reshard_server_weights(server_w: Dict, num_experts: int,
+                           new_servers: int,
+                           redundant_table: np.ndarray) -> Dict:
+    """Re-materialize per-server weights for a different pool size.
+
+    This is elastic scaling's weight path (paper §5.3): the global bank is
+    recovered from the primary slots and re-laid-out for ``new_servers``
+    with the new replication plan.  Pure data movement — router / client
+    params are untouched, expert math is bit-identical.
+    """
+    bank = extract_bank(server_w, num_experts)
+    local_ids = _layout_ids(num_experts, new_servers, redundant_table)
+    gather = jnp.asarray(np.maximum(local_ids, 0).reshape(-1))   # (S'*L',)
+    mask = jnp.asarray(local_ids >= 0)[..., None, None]          # (S', L',1,1)
+
+    def re_shard(w):
+        *lead, E, a, b = w.shape
+        g = jnp.take(w, gather, axis=-3)
+        g = g.reshape(*lead, *local_ids.shape, a, b)
+        return jnp.where(mask, g, 0)
+
+    return {k: re_shard(v) for k, v in bank.items()}
 
 
 class ServeStats(NamedTuple):

@@ -1,5 +1,10 @@
-"""Serving runtime: continuous batching engine (SPMD, jitted) and the
-host-level physically-disaggregated engine (paper-literal buffer protocol)."""
+"""Serving runtime: continuous batching engine (SPMD, jitted), the
+host-level physically-disaggregated engine (paper-literal buffer protocol),
+and the deterministic scenario/autoscaling harness the paper's timeline
+claims are tested with."""
 
 from repro.serving.engine import ServingEngine, EngineConfig  # noqa: F401
 from repro.serving.request import Request, SamplingParams  # noqa: F401
+from repro.serving.clock import Clock, VirtualClock, WallClock  # noqa: F401
+from repro.serving.scenario import Scenario, ScenarioResult  # noqa: F401
+from repro.serving.autoscale import Autoscaler, AutoscalerConfig  # noqa: F401

@@ -1,0 +1,85 @@
+"""Elastic autoscaling control loop (paper §5.3, Fig. 11).
+
+EAAS scales the expert-service tier one server at a time; monolithic EP only
+in whole communication-group multiples.  The :class:`Autoscaler` watches the
+arrival rate (sliding window over submitted requests) plus queue depth and
+drives ``engine.scale_to`` toward the :func:`repro.core.elastic.provision`
+target at its configured granularity — the 37.5% saving in the paper is
+exactly the gap between granularity 1 and granularity 64 under a traffic
+drop.
+
+The loop is pure host-side policy over engine observables: deterministic
+under a virtual clock, and trivially swappable (subclass and override
+:meth:`desired_servers`).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Tuple
+
+from repro.core.elastic import provision
+
+
+@dataclass
+class AutoscalerConfig:
+    rate_per_server: float            # request/s one expert server sustains
+    min_servers: int = 1
+    max_servers: int = 8
+    granularity: int = 1              # 1 = EAAS; group size = monolithic EP
+    window: float = 0.25              # arrival-rate estimation window (s)
+    cooldown: float = 0.2             # min time between scaling actions (s)
+    queue_per_server: float = 0.0     # extra server per this much queue
+                                      # backlog (0 disables queue pressure)
+
+
+class Autoscaler:
+    """Traffic-driven pool resizing: observe arrivals, converge on
+    ``provision(rate)`` snapped to a feasible pool size."""
+
+    def __init__(self, cfg: AutoscalerConfig):
+        self.cfg = cfg
+        self._arrivals: Deque[float] = deque()
+        self._last_action = -float("inf")
+        # (t, observed rate, desired, actual) decision trace
+        self.trace: List[Tuple[float, float, int, int]] = []
+
+    # ------------------------------------------------------------- signals
+    def observe_arrival(self, t: float) -> None:
+        self._arrivals.append(t)
+
+    def observed_rate(self, t: float) -> float:
+        w = self.cfg.window
+        while self._arrivals and self._arrivals[0] < t - w:
+            self._arrivals.popleft()
+        return len(self._arrivals) / max(w, 1e-9)
+
+    # -------------------------------------------------------------- policy
+    def desired_servers(self, t: float, queue_depth: int) -> int:
+        c = self.cfg
+        n = provision(self.observed_rate(t), c.rate_per_server,
+                      c.granularity)
+        if c.queue_per_server > 0 and queue_depth > 0:
+            n += int(queue_depth / c.queue_per_server)
+        return max(c.min_servers, min(c.max_servers, n))
+
+    def step(self, engine, t: float) -> Optional[int]:
+        """One control iteration; returns the new pool size if it scaled."""
+        if engine.pool is None:
+            return None
+        if t < self.cfg.window:        # warm-up: the rate estimate is not
+            return None                # meaningful before one full window
+        want = self.desired_servers(t, len(engine.queue))
+        # snap up to the nearest pool size the expert layout supports
+        feasible = [n for n in engine.pool.feasible_counts()
+                    if n <= self.cfg.max_servers]
+        snapped = next((n for n in feasible if n >= want),
+                       feasible[-1] if feasible else want)
+        have = engine.pool.num_servers
+        self.trace.append((t, self.observed_rate(t), snapped, have))
+        if snapped == have or t - self._last_action < self.cfg.cooldown:
+            return None
+        engine.scale_to(snapped)
+        self._last_action = t
+        return snapped

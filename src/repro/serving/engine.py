@@ -16,15 +16,17 @@ The expert→server mapping, liveness mask and local placement table are
 **jit arguments**, not compiled constants — failover and rebalancing never
 trigger recompilation (the paper's no-group-rebuild property).
 
-The engine clock accumulates real jitted step wall-times, so CPU runs give
-meaningful *relative* curves.  Prompt lengths are bucketed by the caller to
-bound prefill recompiles.
+The engine's notion of time is a pluggable :class:`~repro.serving.clock.Clock`:
+the default :class:`~repro.serving.clock.WallClock` accumulates real jitted
+step wall-times (CPU runs give meaningful *relative* curves), while
+:class:`~repro.serving.clock.VirtualClock` charges a deterministic analytic
+cost per step so scenario runs are bit-reproducible and fast.  Prompt
+lengths are bucketed by the caller to bound prefill recompiles.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
@@ -34,9 +36,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import expert_server
 from repro.core.elastic import ServerPool
 from repro.core.monitor import Monitor
 from repro.models.transformer import Model, ParallelCtx, build_model
+from repro.serving.clock import Clock, WallClock
 from repro.serving.metrics import ServingMetrics
 from repro.serving.request import Request
 from repro.serving.sampling import sample
@@ -60,9 +64,10 @@ class ServingEngine:
     """Continuous batching over a fixed slot pool with EAAS failover."""
 
     def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig,
-                 params=None, seed: int = 0):
+                 params=None, seed: int = 0, clock: Optional[Clock] = None):
         self.cfg = cfg
         self.ecfg = engine_cfg
+        self.clk = clock if clock is not None else WallClock()
         S = engine_cfg.num_servers if engine_cfg.mode != "tp" else 1
         self.pool = None
         if cfg.moe:
@@ -95,6 +100,16 @@ class ServingEngine:
         self._last_decode_time = 0.01
         self._key = jax.random.PRNGKey(seed + 1)
 
+        self._build_jits()
+
+    def _build_jits(self) -> None:
+        """(Re)build the jitted step functions around the current ``_rt0``.
+
+        Called at init and after :meth:`scale_to` — the static fields of the
+        runtime (num_servers, capacity) are baked into the closure, so a pool
+        resize needs a fresh jit variant (the AOT-per-server-count story);
+        liveness/mapping changes stay jit *arguments* and never recompile.
+        """
         model, ecfg, rt0 = self.model, self.ecfg, self._rt0
 
         def ctx_of(rt_arrays):
@@ -111,14 +126,25 @@ class ServingEngine:
                                  max_slots=ecfg.max_seq)
 
         def decode_fn(params, tokens, cache, rt_arrays):
-            logits, cache, _ = model.decode_step(params, tokens, cache,
-                                                 ctx_of(rt_arrays))
-            return logits, cache
+            logits, cache, st = model.decode_step(params, tokens, cache,
+                                                  ctx_of(rt_arrays))
+            # per-expert token counts feed the pool's traffic EMA — this is
+            # what rebalance() and traffic-aware scale_to re-plan from
+            return logits, cache, st.expert_load
 
         self._jit_prefill = jax.jit(prefill_fn)
         self._jit_decode = jax.jit(decode_fn)
 
     # ------------------------------------------------------------ helpers
+    def _alive_frac(self) -> float:
+        """Alive share of the expert-server pool (EAAS failover slowdown)."""
+        if self.pool is None or self.ecfg.mode != "eaas":
+            return 1.0
+        return float(self.pool.smap.alive.mean())
+
+    def _pool_size(self) -> int:
+        return self.pool.num_servers if self.pool else 1
+
     def _rt_arrays(self):
         if self.pool is None:
             return ()
@@ -153,6 +179,29 @@ class ServingEngine:
         """EPLB-style replica re-planning from live traffic (paper §4.5)."""
         if self.pool:
             self.pool.rebalance()
+            self.metrics.events.append({"t": self.clock, "event": "rebalance"})
+
+    def scale_to(self, n: int) -> None:
+        """Elastically resize the expert-server pool to ``n`` servers.
+
+        The pool re-plans its EPLB mapping (liveness preserved), the expert
+        weights are re-sharded from the recovered global bank, and the jitted
+        step variants are rebuilt for the new static server count.  In-flight
+        requests keep their KV cache — scaling never drops work (paper §5.3).
+        """
+        if self.pool is None or n == self.pool.num_servers:
+            return
+        old = self.pool.num_servers
+        self.pool.scale_to(n)
+        E = self.cfg.moe.num_experts
+        red = self.pool.redundant_table
+        self.params = _map_server_weights(
+            self.params,
+            lambda sw: expert_server.reshard_server_weights(sw, E, n, red))
+        self._rt0 = self.pool.runtime(self.ecfg.gemm_impl)
+        self._build_jits()
+        self.metrics.events.append(
+            {"t": self.clock, "event": "scale", "from": old, "to": n})
 
     # --------------------------------------------------------------- slots
     def _admit(self) -> None:
@@ -165,11 +214,13 @@ class ServingEngine:
 
     def _prefill_into(self, b: int, req: Request) -> None:
         tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-        t0 = time.perf_counter()
+        self.clk.start()
         logits, cache_one = self._jit_prefill(self.params, tokens,
                                               self._rt_arrays())
-        logits.block_until_ready()
-        self.clock += time.perf_counter() - t0
+        self.clock += self.clk.stop("prefill", result=logits,
+                                    tokens=tokens.shape[1],
+                                    servers=self._pool_size(),
+                                    alive_frac=self._alive_frac())
         self.cache = jax.tree.map(
             lambda big, one: _slot_write(big, one, b), self.cache, cache_one)
         self._key, sk = jax.random.split(self._key)
@@ -193,19 +244,22 @@ class ServingEngine:
         self._admit()
         active = [b for b, r in enumerate(self.slots) if r is not None]
         if not active:
-            self.clock += 1e-4
+            self.clock += self.clk.idle()
             return
         tokens = np.zeros((len(self.slots), 1), np.int32)
         for b, r in enumerate(self.slots):
             if r is not None:
                 tokens[b, 0] = r.output_tokens[-1]
-        t0 = time.perf_counter()
-        logits, self.cache = self._jit_decode(
+        self.clk.start()
+        logits, self.cache, expert_load = self._jit_decode(
             self.params, jnp.asarray(tokens), self.cache, self._rt_arrays())
-        logits.block_until_ready()
-        dt = time.perf_counter() - t0
+        dt = self.clk.stop("decode", result=logits, tokens=len(active),
+                           servers=self._pool_size(),
+                           alive_frac=self._alive_frac())
         self._last_decode_time = dt
         self.clock += dt
+        if self.pool is not None:
+            self.pool.observe_load(np.asarray(expert_load))
         self._key, sk = jax.random.split(self._key)
         next_tokens = np.asarray(sample(logits, 0.0, sk))
 
@@ -241,6 +295,21 @@ class ServingEngine:
             self.step()
         self.metrics.wall_time = self.clock
         return self.metrics
+
+
+def _map_server_weights(params, fn):
+    """Apply ``fn`` to every MoE layer's per-server weight dict in a params
+    tree (the ``{"moe": {"servers": ...}}`` sub-dicts), leaving everything
+    else untouched."""
+    if isinstance(params, dict):
+        out = {}
+        for k, v in params.items():
+            if k == "moe" and isinstance(v, dict) and "servers" in v:
+                out[k] = dict(v, servers=fn(v["servers"]))
+            else:
+                out[k] = _map_server_weights(v, fn)
+        return out
+    return params
 
 
 def _slot_write(big, one, b: int):

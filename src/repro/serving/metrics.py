@@ -3,8 +3,10 @@
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -32,6 +34,51 @@ class ServingMetrics:
         return {"mean": float(a.mean()),
                 "p50": float(np.percentile(a, 50)),
                 "p99": float(np.percentile(a, 99))}
+
+    def throughput_curve(self, bin_width: float) -> List[Tuple[float, float]]:
+        """Decode throughput per time bin: [(bin midpoint, tok/s), ...].
+
+        This is the paper's Fig. 10 fault curve — the per-interval dip under
+        failures — computed from the step timeline."""
+        if not self.timeline:
+            return []
+        t_end = self.timeline[-1]["t"]
+        n_bins = max(1, int(np.ceil(t_end / bin_width)))
+        toks = np.zeros(n_bins)
+        for entry in self.timeline:
+            b = min(int(entry["t"] / bin_width), n_bins - 1)
+            toks[b] += entry["tokens"]
+        return [((b + 0.5) * bin_width, float(toks[b] / bin_width))
+                for b in range(n_bins)]
+
+    def fingerprint(self, ndigits: int = 9) -> str:
+        """Content hash of the full run timeline (times rounded to
+        ``ndigits``).  Two runs of the same seeded scenario under a virtual
+        clock must produce identical fingerprints — the determinism
+        contract the scenario tests pin down."""
+        def clean(obj):
+            if isinstance(obj, float):
+                return round(obj, ndigits)
+            if isinstance(obj, dict):
+                return {k: clean(v) for k, v in sorted(obj.items())}
+            if isinstance(obj, (list, tuple)):
+                return [clean(v) for v in obj]
+            if isinstance(obj, (np.integer,)):
+                return int(obj)
+            if isinstance(obj, (np.floating,)):
+                return round(float(obj), ndigits)
+            return obj
+        payload = clean({
+            "requests": self.total_requests,
+            "completed": self.completed,
+            "tokens": self.total_output_tokens,
+            "wall": self.wall_time,
+            "itls": list(self.itls),
+            "events": list(self.events),
+            "timeline": list(self.timeline),
+        })
+        blob = json.dumps(payload, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()
 
     def summary(self) -> Dict:
         return {

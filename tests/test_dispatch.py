@@ -3,6 +3,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install "
+    "hypothesis); dispatch invariants are also covered hypothesis-free in "
+    "test_scenario.py")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import dispatch

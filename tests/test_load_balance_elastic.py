@@ -2,6 +2,11 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install "
+    "hypothesis); elastic/provision edge cases are also covered "
+    "hypothesis-free in test_elastic_edges.py")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config

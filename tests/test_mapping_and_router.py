@@ -4,6 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install "
+    "hypothesis); mapping liveness edge cases are also covered "
+    "hypothesis-free in test_elastic_edges.py")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import MoEConfig

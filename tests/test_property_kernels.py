@@ -9,6 +9,11 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install "
+    "hypothesis); kernel oracles are also covered in test_kernels.py")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import group_shrink as gs
