@@ -4,8 +4,7 @@ from __future__ import annotations
 
 import json
 import os
-import time
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List
 
 import numpy as np
 

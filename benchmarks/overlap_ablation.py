@@ -1,0 +1,101 @@
+"""Paper Fig. 8 — overlap ablation: decoding with and without client
+pipelining, plus the chunked-prefill latency trade.
+
+Thin driver over the scenario harness: one seeded bursty trace (long
+prompts — the regime where prefill stalls hurt) replayed across engine
+variants under the overlap-aware virtual clock:
+
+* ``pipelined``   — two-microbatch decode, expert round-trip of microbatch
+  A overlapped with the attention of microbatch B (charged
+  ``max(attn, expert) + ε`` per step);
+* ``serialized``  — the same two-microbatch split with the collectives
+  exposed on the critical path (charged the sum — the ablation baseline);
+* ``lockstep``    — the pre-split single-batch step (cost == serialized;
+  kept as the semantics reference);
+
+crossed with unchunked vs chunked prefill (``policy="fair"``), which trades
+a little prefill overhead (one ``prefill_base`` per chunk) for bounded
+decode gaps — the max-ITL column.
+
+Outputs decode throughput and ITL/TTFT summaries per variant.  Runs under
+the virtual clock by default — deterministic and reproducible bit-for-bit
+(pass ``clock="wall"`` for real step timing).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import (bench_model_cfg, csv_row, run_scenario,
+                               save_result)
+from repro.serving import EngineConfig, Scenario, VirtualClock
+
+VARIANTS = (
+    ("pipelined", dict(decode_mode="pipelined")),
+    ("serialized", dict(decode_mode="serialized")),
+    ("lockstep", dict(decode_mode="lockstep")),
+    ("pipelined_chunked", dict(decode_mode="pipelined", prefill_chunk=8,
+                               policy="fair")),
+    ("serialized_chunked", dict(decode_mode="serialized", prefill_chunk=8,
+                                policy="fair")),
+)
+
+
+def _engine_cfg(**kw) -> EngineConfig:
+    # dispatch buffers sized for the longest prefill step so no variant
+    # drops tokens — outputs stay identical across the whole sweep
+    return EngineConfig(mode="eaas", num_servers=4, max_batch=4, max_seq=128,
+                        n_redundant=2, pool_tokens_per_client=128, **kw)
+
+
+def _scenario(vocab: int, horizon: float, max_new: int) -> Scenario:
+    # flash-crowd bursts of long prompts: prefill pressure + decode load
+    return (Scenario(horizon=horizon, seed=0, prompt_len=32,
+                     max_new=max_new, vocab=vocab)
+            .bursty(base=20, peak=200, period=0.2, duty=0.3))
+
+
+def run(horizon: float = 0.6, max_new: int = 16,
+        clock=None) -> Dict:
+    cfg = bench_model_cfg()
+    if clock is None:
+        # expert-heavy decode cost: the overlap term dominates the base,
+        # as on a real mesh where the a2a round-trip is the long pole
+        clock = VirtualClock(decode_per_token=4e-3)
+    out = {"figure": "fig8_overlap_ablation",
+           "clock": type(clock).__name__, "variants": {}}
+    for name, kw in VARIANTS:
+        _, res = run_scenario(cfg, _engine_cfg(**kw),
+                              _scenario(cfg.vocab_size, horizon, max_new),
+                              clock=clock)
+        m = res.metrics
+        out["variants"][name] = {
+            "decode_tok_per_s": m.decode_throughput,
+            "wall_time_s": m.wall_time,
+            "itl": m.itl_stats(),
+            "ttft": m.ttft_stats(),
+            "completed": m.completed,
+        }
+    pipe = out["variants"]["pipelined"]["decode_tok_per_s"]
+    ser = out["variants"]["serialized"]["decode_tok_per_s"]
+    out["overlap_speedup"] = pipe / max(ser, 1e-9)
+    save_result("fig8_overlap_ablation", out)
+    return out
+
+
+def main() -> List[str]:
+    res = run()
+    rows = []
+    for name, r in res["variants"].items():
+        rows.append(csv_row(
+            f"fig8_{name}", 0.0,
+            f"tok_per_s={r['decode_tok_per_s']:.1f}"
+            f";itl_max_ms={r['itl']['max'] * 1e3:.2f}"
+            f";ttft_p99_ms={r['ttft']['p99'] * 1e3:.2f}"))
+    rows.append(csv_row("fig8_overlap_speedup", 0.0,
+                        f"x{res['overlap_speedup']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -12,13 +12,14 @@ import traceback
 def main() -> None:
     fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
     from benchmarks import (ablation, comm, fault_tolerance, latency,
-                            roofline, scaling, throughput)
+                            overlap_ablation, roofline, scaling, throughput)
 
     suites = [("fig12_comm", comm.main),
               ("fig13_ablation", ablation.main),
               ("roofline", roofline.main)]
     if not fast:
         suites = [("fig8_throughput", throughput.main),
+                  ("fig8_overlap_ablation", overlap_ablation.main),
                   ("fig9_latency", latency.main),
                   ("fig10_fault_tolerance", fault_tolerance.main),
                   ("fig11_scaling", scaling.main)] + suites

@@ -20,8 +20,7 @@ from repro.models.transformer import ParallelCtx, build_model
 from repro.training.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.training.data import synthetic_lm_batches
 from repro.training.optimizer import adamw, cosine_schedule
-from repro.training.train_loop import (init_train_state, make_train_step,
-                                       train_loop)
+from repro.training.train_loop import init_train_state, make_train_step
 
 CKPT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                         "ckpt_train_small")

@@ -29,7 +29,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import DispatchBuffers, ServeResult
+from repro.core.types import DispatchBuffers
 
 
 def send_to_servers(buffers: DispatchBuffers, axis_name: Optional[str],

@@ -17,7 +17,6 @@ dropped (counted) exactly as capacity-factor MoE implementations do.
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,8 +15,8 @@ freely at runtime; the *physical* mesh changes through AOT-compiled variants
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List
 
 import jax.numpy as jnp
 import numpy as np

@@ -10,7 +10,6 @@ core.mapping / core.expert_server.
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Optional, Tuple
 

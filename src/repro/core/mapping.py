@@ -12,7 +12,7 @@ returns the jnp views fed to the jitted step.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

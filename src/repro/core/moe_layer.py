@@ -29,7 +29,6 @@ import numpy as np
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.core import comm, dispatch, expert_server, mapping as emap, router
 from repro.core.expert_server import ServerWeights
-from repro.core.types import DispatchBuffers
 
 
 class MoERuntime(NamedTuple):

@@ -20,13 +20,11 @@ Protocol reproduced from the paper:
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Set, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Set, Tuple
 
 import numpy as np
 
-from repro.core.mapping import ExpertServerMap
 from repro.core.types import (STATE_CLIENT_WRITE_DONE, STATE_EMPTY,
                               STATE_OFFLINE, STATE_SERVER_DONE)
 

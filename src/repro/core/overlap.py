@@ -46,6 +46,42 @@ def double_batch_overlap(dense_fn: Callable, moe_fn: Callable,
     return jnp.concatenate([y0, y1], axis=0)
 
 
+def split_batch_decode(step_fn: Callable, tokens: jax.Array, cache, *,
+                       axis: int, enabled: bool = True):
+    """One decode step as two half-batch microbatches (engine-level DBO).
+
+    ``step_fn(tokens_half, cache_half) -> (logits, cache, stats)`` is the
+    whole-model decode step; ``axis`` is the batch axis shared by every
+    cache leaf.  With ``enabled=True`` the two halves are independent
+    subgraphs, so XLA's latency-hiding scheduler may overlap microbatch A's
+    expert a2a with microbatch B's attention — the serving executor's
+    pipelined decode.  With ``enabled=False`` a zero-valued coupling chains
+    B behind A's logits without changing the math: the serialized ablation,
+    bit-identical outputs, collectives exposed on the critical path.
+    """
+    B = tokens.shape[0]
+    assert B % 2 == 0, "two-microbatch decode needs an even batch"
+    half = B // 2
+    t0, t1 = jnp.split(tokens, 2, axis=0)
+
+    def cache_half(i: int):
+        return jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, i * half, (i + 1) * half,
+                                           axis=axis), cache)
+
+    l0, c0, s0 = step_fn(t0, cache_half(0))
+    if not enabled:
+        # artificial data dependency: mb1's tokens wait on mb0's logits
+        t1 = t1 + (0 * jnp.sum(l0)).astype(t1.dtype)
+    l1, c1, s1 = step_fn(t1, cache_half(1))
+
+    logits = jnp.concatenate([l0, l1], axis=0)
+    new_cache = jax.tree.map(
+        lambda a, b: jnp.concatenate([a, b], axis=axis), c0, c1)
+    stats = jax.tree.map(lambda a, b: a + b, s0, s1)
+    return logits, new_cache, stats
+
+
 def microbatch_schedule(n: int) -> Tuple[Tuple[int, str], ...]:
     """The steady-state two-batch schedule (for the engine + docs):
     (mb, phase) pairs — attention(i+1) overlaps expert(i)."""

@@ -16,10 +16,9 @@ engine (serving/engine.py) uses the literal flags via core/monitor.py.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 
 # Buffer protocol states (paper §3.2)
 STATE_EMPTY = 0

@@ -17,13 +17,11 @@ Specs are matched by parameter *path suffix*; stacked scan dimensions
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig
 
 
 def _path_of(key_path) -> str:

@@ -15,7 +15,6 @@ EXPERIMENTS.md §Perf.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ sets ``xla_dense``; tests pin impls explicitly).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -40,7 +40,7 @@ from repro.distributed.sharding_rules import (batch_shardings,
                                               param_shardings, to_named)
 from repro.kernels import ops as kops
 from repro.launch.mesh import data_axes, make_production_mesh
-from repro.models.transformer import Model, ParallelCtx, build_model
+from repro.models.transformer import ParallelCtx, build_model
 from repro.core.moe_layer import MoERuntime, default_capacity
 from repro.core import mapping as emap
 from repro.training.optimizer import adafactor
@@ -294,7 +294,6 @@ def build_cell(arch: str, shape: InputShape, mesh, cfg=None,
 
 def probe_plan(cfg: ModelConfig):
     """Returns (probe_cfgs, combine(costs) -> cost_dict)."""
-    import dataclasses as _dc
 
     def rep(**kw):
         return cfg.replace(**kw)

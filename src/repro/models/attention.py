@@ -10,7 +10,7 @@ already rotated (standard practice; makes ring-buffer windows trivial).
 from __future__ import annotations
 
 import math
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -149,6 +149,41 @@ def _chunked_core(cfg, q, k, v, positions, *, is_local, causal,
     _, outs = jax.lax.scan(jax.checkpoint(body), None, (qb, pb),
                            unroll=unroll)
     return outs.swapaxes(0, 1).reshape(b, s, h, hd)
+
+
+# ------------------------------------------------------------ chunk prefill
+
+def chunk_attention(params: Dict, cfg: ModelConfig, x: jax.Array,
+                    cache: kvc.KVCache, positions: jax.Array, *,
+                    mrope_positions=None) -> Tuple[jax.Array, kvc.KVCache]:
+    """Prefill one prompt *chunk* against the cache (chunked prefill).
+
+    x: (batch, chunk, d_model); positions: (chunk,) global token positions
+    (``start + arange(chunk)``).  The chunk's rotated K/V are written into
+    the cache at ``positions[0]`` and the chunk's queries attend over every
+    cached position ``<=`` their own — earlier chunks included — so the
+    result matches a single full-prompt prefill (slots beyond the causal
+    frontier are masked; masked lanes contribute exact zeros).
+    """
+    b, s, d = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _split_heads(x @ params["wq"], h, hd)
+    k = _split_heads(x @ params["wk"], kvh, hd)
+    v = _split_heads(x @ params["wv"], kvh, hd)
+
+    pos_b = jnp.broadcast_to(positions[None], (b, s))
+    cos, sin = _rope_for(cfg, pos_b, mrope_positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    cache = kvc.write_chunk(cache, k, v, positions[0])
+    slots = cache.k.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(slots, dtype=jnp.int32)[None],
+                             (b, slots))
+    out = _dense_core(cfg, q, cache.k, cache.v, pos_b, k_pos,
+                      is_local=False, causal=True)
+    out = out.reshape(b, s, h * hd).astype(x.dtype) @ params["wo"]
+    return out, cache
 
 
 # ------------------------------------------------------------------- decode

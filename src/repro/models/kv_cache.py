@@ -11,7 +11,6 @@ jitted ``serve_step``s and be donated.
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 
 import jax
@@ -87,6 +86,19 @@ def write_prefill(cache: KVCache, k: jax.Array, v: jax.Array) -> KVCache:
         ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, 0, axis=1)
         cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)
     length = jnp.full_like(cache.length, seq)
+    return KVCache(k=ck, v=cv, length=length, window=cache.window)
+
+
+def write_chunk(cache: KVCache, k: jax.Array, v: jax.Array,
+                start) -> KVCache:
+    """Write a prompt *chunk* (batch, chunk, kv_heads, hd) at position
+    ``start`` (scalar int32, may be traced).  Linear caches only — chunked
+    prefill is gated off for sliding-window layers by the caller."""
+    assert cache.window == 0, "write_chunk needs a linear cache"
+    seq = k.shape[1]
+    ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, start, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, start, axis=1)
+    length = jnp.full_like(cache.length, start + seq)
     return KVCache(k=ck, v=cv, length=length, window=cache.window)
 
 

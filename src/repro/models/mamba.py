@@ -16,7 +16,6 @@ ngroups=1 (B/C shared across heads) and the short conv applies to x only.
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, NamedTuple, Tuple
 
 import jax

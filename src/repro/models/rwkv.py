@@ -17,7 +17,6 @@ Simplification vs. reference: the token-shift mix coefficients are static
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, NamedTuple, Tuple
 
 import jax

@@ -19,8 +19,6 @@ context decode uses the explicit sequence-parallel attention island.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
@@ -432,6 +430,43 @@ def _block_prefill(p: Dict, cfg: ModelConfig, x: jax.Array,
     return x, cache, stats
 
 
+def _block_prefill_chunk(p: Dict, cfg: ModelConfig, x: jax.Array,
+                         positions: jax.Array, cache: kvc.KVCache,
+                         ctx: ParallelCtx, *, mrope_positions=None):
+    """One block over a prompt *chunk*: attention against the cache (which
+    holds every earlier chunk), chunk K/V written in.  Same math as
+    :func:`_block_prefill` restricted to the chunk's rows."""
+    B, S, d = x.shape
+    h = rms_norm(x, p["ln1"], cfg.rms_norm_eps)
+    h, cache = attn.chunk_attention(p["attn"], cfg, h, cache, positions,
+                                    mrope_positions=mrope_positions)
+    x = x + h
+    h = rms_norm(x, p["ln2"], cfg.rms_norm_eps)
+    stats = None
+    if "moe" in p:
+        y, stats = _moe_apply(p["moe"], h.reshape(B * S, d), cfg, ctx)
+        h = y.reshape(B, S, d)
+    else:
+        h = mlp(p["mlp"], h, cfg.activation)
+    x = x + h
+    return x, cache, stats
+
+
+def _scan_prefill_chunk(blocks: Dict, caches, cfg: ModelConfig, x: jax.Array,
+                        positions: jax.Array, ctx: ParallelCtx, *,
+                        mrope=None):
+    def body(xc, inp):
+        p, c = inp
+        out, nc, stats = _block_prefill_chunk(p, cfg, xc, positions, c, ctx,
+                                              mrope_positions=mrope)
+        if stats is None:
+            stats = _zero_stats(cfg)
+        return out, (nc, stats)
+    x, (ncaches, stats) = jax.lax.scan(body, x, (blocks, caches),
+                                       unroll=ctx.unroll_scans)
+    return x, ncaches, stats
+
+
 # ---------------------------------------------------------------------------
 # Embedding / head / loss
 # ---------------------------------------------------------------------------
@@ -498,6 +533,13 @@ class Model(NamedTuple):
     decode_step: Callable      # (params, token, cache, ctx, extras) -> (logits, cache)
     init_cache: Callable       # (batch, max_slots, abstract=False) -> cache
     num_servers: int
+    # chunked-prefill continuation: (params, tokens, cache, start, ctx) ->
+    # (logits, cache).  None for families without cache-resident prefill
+    # (the serving scheduler falls back to whole-prompt prefill).
+    prefill_chunk: Optional[Callable] = None
+    # batch axis shared by every cache leaf (for microbatch splits in the
+    # serving executor); None when the cache layout is heterogeneous.
+    cache_batch_axis: Optional[int] = None
 
 
 def _positions(tokens: jax.Array) -> jax.Array:
@@ -606,6 +648,33 @@ def _build_decoder(cfg: ModelConfig, num_servers: int,
         logits = _logits(params, cfg, x[:, -1]).astype(jnp.float32)
         return logits, cache
 
+    def prefill_chunk(params, tokens, cache, start, ctx: ParallelCtx,
+                      batch=None):
+        """Continue a prefill: process prompt positions [start, start+C)
+        against a cache already holding [0, start).  Composing chunks over a
+        prompt reproduces :func:`prefill`'s logits and cache exactly (same
+        rotated keys, same masked softmax — padding lanes are exact zeros).
+        """
+        B, C = tokens.shape
+        start = jnp.asarray(start, jnp.int32)
+        pos = start + jnp.arange(C, dtype=jnp.int32)
+        x = _embed_tokens(params, cfg, tokens, ctx)
+        mrope = None
+        if cfg.mrope_sections is not None:
+            mrope = text_mrope_positions(
+                jnp.broadcast_to(pos[None], (B, C)))
+        if n_dense_prefix:
+            x, cd, _ = _scan_prefill_chunk(params["dense_blocks"],
+                                           cache["dense"], cfg, x, pos, ctx,
+                                           mrope=mrope)
+            cache = dict(cache, dense=cd)
+        x, cb, _ = _scan_prefill_chunk(params["blocks"], cache["blocks"],
+                                       cfg, x, pos, ctx, mrope=mrope)
+        cache = dict(cache, blocks=cb)
+        x = rms_norm(x, params["final_ln"], cfg.rms_norm_eps)
+        logits = _logits(params, cfg, x[:, -1]).astype(jnp.float32)
+        return logits, cache
+
     def decode_step(params, token, cache, ctx: ParallelCtx, batch=None):
         x = _embed_tokens(params, cfg, token, ctx)
         stats_all = []
@@ -622,7 +691,8 @@ def _build_decoder(cfg: ModelConfig, num_servers: int,
         return logits, cache, _sum_stats(*stats_all)
 
     return Model(cfg, init_params, loss_fn, prefill, decode_step, init_cache,
-                 num_servers)
+                 num_servers, prefill_chunk=prefill_chunk,
+                 cache_batch_axis=1)
 
 
 def _stack_kv_cache(n: int, batch: int, max_slots: int, kv_heads: int,

@@ -8,13 +8,11 @@ the piece of Qwen2-VL that actually interacts with the backbone.
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.rope import text_mrope_positions
 
 
 def image_mrope_positions(text_len_before: int, grid_h: int, grid_w: int,

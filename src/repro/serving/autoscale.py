@@ -16,7 +16,7 @@ under a virtual clock, and trivially swappable (subclass and override
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Deque, List, Optional, Tuple
 
 from repro.core.elastic import provision
@@ -32,6 +32,10 @@ class AutoscalerConfig:
     cooldown: float = 0.2             # min time between scaling actions (s)
     queue_per_server: float = 0.0     # extra server per this much queue
                                       # backlog (0 disables queue pressure)
+    # extra server per this many *unprefilled prompt tokens* (queued +
+    # mid-chunk backlog) — with chunked prefill a deep prompt backlog is
+    # visible before it converts into queue depth (0 disables)
+    prefill_tokens_per_server: float = 0.0
 
 
 class Autoscaler:
@@ -56,12 +60,15 @@ class Autoscaler:
         return len(self._arrivals) / max(w, 1e-9)
 
     # -------------------------------------------------------------- policy
-    def desired_servers(self, t: float, queue_depth: int) -> int:
+    def desired_servers(self, t: float, queue_depth: int,
+                        prefill_backlog: int = 0) -> int:
         c = self.cfg
         n = provision(self.observed_rate(t), c.rate_per_server,
                       c.granularity)
         if c.queue_per_server > 0 and queue_depth > 0:
             n += int(queue_depth / c.queue_per_server)
+        if c.prefill_tokens_per_server > 0 and prefill_backlog > 0:
+            n += int(prefill_backlog / c.prefill_tokens_per_server)
         return max(c.min_servers, min(c.max_servers, n))
 
     def step(self, engine, t: float) -> Optional[int]:
@@ -70,7 +77,10 @@ class Autoscaler:
             return None
         if t < self.cfg.window:        # warm-up: the rate estimate is not
             return None                # meaningful before one full window
-        want = self.desired_servers(t, len(engine.queue))
+        backlog = 0
+        if self.cfg.prefill_tokens_per_server > 0:
+            backlog = engine.scheduler.pending_prefill_tokens()
+        want = self.desired_servers(t, len(engine.queue), backlog)
         # snap up to the nearest pool size the expert layout supports
         feasible = [n for n in engine.pool.feasible_counts()
                     if n <= self.cfg.max_servers]

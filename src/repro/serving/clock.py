@@ -40,14 +40,18 @@ class Clock:
         raise NotImplementedError
 
     def stop(self, kind: str, *, result=None, tokens: int = 0,
-             servers: int = 1, alive_frac: float = 1.0) -> float:
+             servers: int = 1, alive_frac: float = 1.0,
+             overlap: bool = False) -> float:
         """End the bracket opened by :meth:`start`.
 
         kind: "prefill" | "decode"; result: a jax array to block on (wall
-        clocks only); tokens: token work in the step (prompt length for
-        prefill, active slots for decode); servers: expert-server pool size
-        (the token work parallelizes over it); alive_frac: alive share of
-        the pool (EAAS failover slowdown).
+        clocks only); tokens: token work in the step (chunk length for
+        prefill — chunked prefill is charged per chunk, base included —
+        active slots for decode); servers: expert-server pool size (the
+        token work parallelizes over it); alive_frac: alive share of the
+        pool (EAAS failover slowdown); overlap: the step ran as two
+        pipelined microbatches (client pipelining, paper §4.2) — virtual
+        clocks charge ``max(attention, expert) + ε`` instead of the sum.
         """
         raise NotImplementedError
 
@@ -66,7 +70,8 @@ class WallClock(Clock):
         self._t0 = time.perf_counter()
 
     def stop(self, kind: str, *, result=None, tokens: int = 0,
-             servers: int = 1, alive_frac: float = 1.0) -> float:
+             servers: int = 1, alive_frac: float = 1.0,
+             overlap: bool = False) -> float:
         if result is not None:
             result.block_until_ready()
         return time.perf_counter() - self._t0
@@ -87,19 +92,34 @@ class VirtualClock(Clock):
     # so steps slow by the lost compute share.  Disable to model an
     # over-provisioned pool where failover is free.
     degrade_with_dead: bool = True
+    # overlap-aware decode: the per-token term splits into an expert
+    # round-trip share and an attention/client share; a pipelined step
+    # (two microbatches, paper §4.2) charges max of the two plus a small
+    # pipeline-fill ε instead of their sum.  Chunked prefill needs no extra
+    # knob — each chunk is its own stop(), so it pays prefill_base per
+    # chunk (the chunking overhead) with the per-token term split across
+    # chunks.
+    expert_share: float = 0.5
+    overlap_eps: float = 1e-5
 
     def start(self) -> None:  # nothing to measure
         pass
 
     def stop(self, kind: str, *, result=None, tokens: int = 0,
-             servers: int = 1, alive_frac: float = 1.0) -> float:
+             servers: int = 1, alive_frac: float = 1.0,
+             overlap: bool = False) -> float:
         # token work parallelizes over the expert-server pool (weak scaling);
         # the base covers attention/client work that does not.
         work = tokens / max(servers, 1)
         if kind == "prefill":
             dt = self.prefill_base + self.prefill_per_token * work
         else:
-            dt = self.decode_base + self.decode_per_token * work
+            var = self.decode_per_token * work
+            if overlap:
+                expert = self.expert_share * var
+                client = (1.0 - self.expert_share) * var
+                var = max(expert, client) + self.overlap_eps
+            dt = self.decode_base + var
         if self.degrade_with_dead:
             dt /= max(min(alive_frac, 1.0), 1e-3)
         return dt

@@ -19,9 +19,8 @@ protocol itself is agnostic to who drives the actors.
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +28,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import mapping as emap
-from repro.core.monitor import Monitor, SharedBuffer
+from repro.core.monitor import SharedBuffer
 from repro.kernels import ops as kops
 
 

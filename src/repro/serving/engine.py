@@ -1,6 +1,18 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine — the orchestration layer.
 
-One engine class serves three system modes (paper §5 baselines):
+The engine is split in three (the scheduler/executor refactor):
+
+* :class:`~repro.serving.scheduler.Scheduler` — admission, slot
+  assignment, chunked prefill and the step policy (what runs next:
+  a prefill chunk, a decode step, or idle);
+* :class:`~repro.serving.executor.Executor` — params, KV caches and the
+  jitted step variants (whole-prompt prefill, chunked-prefill
+  continuation, and lockstep / pipelined / serialized decode);
+* :class:`ServingEngine` (this module) — wires scheduler → executor →
+  metrics around the pluggable :class:`~repro.serving.clock.Clock`, and
+  keeps the control plane: failover, rebalancing, elastic ``scale_to``.
+
+One engine class still serves the three system modes (paper §5 baselines):
 
 * ``mode="eaas"``        — EAAS: replicated experts, liveness-masked mapping;
   a server failure re-routes traffic to replicas within the same step
@@ -16,34 +28,36 @@ The expert→server mapping, liveness mask and local placement table are
 **jit arguments**, not compiled constants — failover and rebalancing never
 trigger recompilation (the paper's no-group-rebuild property).
 
-The engine's notion of time is a pluggable :class:`~repro.serving.clock.Clock`:
-the default :class:`~repro.serving.clock.WallClock` accumulates real jitted
-step wall-times (CPU runs give meaningful *relative* curves), while
-:class:`~repro.serving.clock.VirtualClock` charges a deterministic analytic
-cost per step so scenario runs are bit-reproducible and fast.  Prompt
-lengths are bucketed by the caller to bound prefill recompiles.
+Decode can run as two pipelined microbatches (``decode_mode="pipelined"``,
+paper §4.2): the expert round-trip of microbatch A overlaps the attention
+of microbatch B.  Outputs are bit-identical to the lockstep engine — only
+the step cost changes (the overlap-aware
+:class:`~repro.serving.clock.VirtualClock` charges ``max(attn, expert)+ε``
+instead of the sum; ``decode_mode="serialized"`` is the exposed-collective
+ablation).  Chunked prefill (``prefill_chunk=N`` with ``policy="fair"``)
+bounds decode gaps to one chunk instead of one prompt.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from collections import deque
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import expert_server
 from repro.core.elastic import ServerPool
 from repro.core.monitor import Monitor
-from repro.models.transformer import Model, ParallelCtx, build_model
+from repro.models.transformer import build_model
 from repro.serving.clock import Clock, WallClock
+from repro.serving.executor import Executor
 from repro.serving.metrics import ServingMetrics
 from repro.serving.request import Request
-from repro.serving.sampling import sample
+from repro.serving.sampling import sample, sample_batch
+from repro.serving.scheduler import (DecodeBatch, PrefillChunk, Scheduler,
+                                     SchedulerConfig)
 
 
 @dataclass
@@ -58,10 +72,25 @@ class EngineConfig:
     tp_batch_cap: Optional[int] = None # TP: weight replication caps batch
     gemm_impl: str = "xla_ragged"
     eos_token: Optional[int] = None
+    # --- scheduler knobs -------------------------------------------------
+    # max prompt tokens per prefill step (0 = whole prompt, the pre-split
+    # behaviour); needs a model family with prefill_chunk support,
+    # silently unchunked otherwise
+    prefill_chunk: int = 0
+    policy: str = "prefill-priority"   # prefill-priority | fair | fcfs
+    # --- executor knobs --------------------------------------------------
+    # lockstep (pre-split single-batch step) | pipelined (two-microbatch
+    # client pipelining, §4.2) | serialized (the ablation: same split,
+    # collectives exposed)
+    decode_mode: str = "lockstep"
+    # dispatch-buffer sizing override (tokens per client step); default is
+    # max_batch, the seed behaviour — raise it when prefill chunks carry
+    # more tokens than a decode batch so fixed-capacity buffers don't drop
+    pool_tokens_per_client: Optional[int] = None
 
 
 class ServingEngine:
-    """Continuous batching over a fixed slot pool with EAAS failover."""
+    """Scheduler → executor → metrics orchestrator with EAAS failover."""
 
     def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig,
                  params=None, seed: int = 0, clock: Optional[Clock] = None):
@@ -72,68 +101,56 @@ class ServingEngine:
         self.pool = None
         if cfg.moe:
             self.pool = ServerPool(
-                cfg, S, tokens_per_client=engine_cfg.max_batch,
+                cfg, S,
+                tokens_per_client=(engine_cfg.pool_tokens_per_client
+                                   or engine_cfg.max_batch),
                 n_redundant=(engine_cfg.n_redundant
                              if engine_cfg.mode == "eaas" else 0))
         self.model = build_model(
             cfg, num_servers=S if cfg.moe else 1,
             redundant_table=self.pool.redundant_table if self.pool else None)
         key = jax.random.PRNGKey(seed)
-        self.params = params if params is not None else \
+        params = params if params is not None else \
             self.model.init_params(key)
         self.monitor = Monitor(heartbeat_timeout=3.0)
         if self.pool:
             self.monitor.subscribe_server_down(self.pool.server_failed)
 
-        # static runtime skeleton — arrays swapped per step via jit args
-        self._rt0 = self.pool.runtime(engine_cfg.gemm_impl) \
-            if self.pool else None
+        self.executor = Executor(
+            self.model, params, self.pool,
+            max_batch=engine_cfg.max_batch, max_seq=engine_cfg.max_seq,
+            gemm_impl=engine_cfg.gemm_impl,
+            decode_mode=engine_cfg.decode_mode)
+        chunk = (engine_cfg.prefill_chunk
+                 if self.executor.supports_chunked_prefill else 0)
+        self.scheduler = Scheduler(SchedulerConfig(
+            max_batch=engine_cfg.max_batch, prefill_chunk=chunk,
+            policy=engine_cfg.policy,
+            batch_cap=(engine_cfg.tp_batch_cap
+                       if engine_cfg.mode == "tp" else None)))
 
-        B, L = engine_cfg.max_batch, engine_cfg.max_seq
-        self.cache = self.model.init_cache(B, L)
-        self.slots: List[Optional[Request]] = [None] * B
-        self.queue: deque = deque()
         self.metrics = ServingMetrics()
         self.step_idx = 0
         self.clock = 0.0
         self.halted_until = -1
         self._last_decode_time = 0.01
-        self._key = jax.random.PRNGKey(seed + 1)
 
-        self._build_jits()
+    # ------------------------------------------------- back-compat surface
+    @property
+    def queue(self):
+        return self.scheduler.queue
 
-    def _build_jits(self) -> None:
-        """(Re)build the jitted step functions around the current ``_rt0``.
+    @property
+    def slots(self):
+        return self.scheduler.slots
 
-        Called at init and after :meth:`scale_to` — the static fields of the
-        runtime (num_servers, capacity) are baked into the closure, so a pool
-        resize needs a fresh jit variant (the AOT-per-server-count story);
-        liveness/mapping changes stay jit *arguments* and never recompile.
-        """
-        model, ecfg, rt0 = self.model, self.ecfg, self._rt0
+    @property
+    def params(self):
+        return self.executor.params
 
-        def ctx_of(rt_arrays):
-            rt = None
-            if rt0 is not None:
-                mapping, alive, local = rt_arrays
-                rt = rt0._replace(mapping=mapping, alive=alive,
-                                  local_table=local)
-            return ParallelCtx(moe_runtime=rt, gemm_impl=ecfg.gemm_impl,
-                               remat=False)
-
-        def prefill_fn(params, tokens, rt_arrays):
-            return model.prefill(params, tokens, ctx_of(rt_arrays),
-                                 max_slots=ecfg.max_seq)
-
-        def decode_fn(params, tokens, cache, rt_arrays):
-            logits, cache, st = model.decode_step(params, tokens, cache,
-                                                  ctx_of(rt_arrays))
-            # per-expert token counts feed the pool's traffic EMA — this is
-            # what rebalance() and traffic-aware scale_to re-plan from
-            return logits, cache, st.expert_load
-
-        self._jit_prefill = jax.jit(prefill_fn)
-        self._jit_decode = jax.jit(decode_fn)
+    @property
+    def cache(self):
+        return self.executor.cache
 
     # ------------------------------------------------------------ helpers
     def _alive_frac(self) -> float:
@@ -145,16 +162,16 @@ class ServingEngine:
     def _pool_size(self) -> int:
         return self.pool.num_servers if self.pool else 1
 
-    def _rt_arrays(self):
-        if self.pool is None:
-            return ()
-        rt = self.pool.runtime(self.ecfg.gemm_impl)
-        return (rt.mapping, rt.alive, rt.local_table)
-
     # ------------------------------------------------------------- control
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self.scheduler.submit(req)
         self.metrics.total_requests += 1
+
+    def set_policy(self, policy: str) -> None:
+        """Switch the scheduler policy mid-run (scenario ``set_policy``)."""
+        self.scheduler.set_policy(policy)
+        self.metrics.events.append(
+            {"t": self.clock, "event": "set_policy", "policy": policy})
 
     def inject_server_failure(self, rank: int) -> None:
         """Simulated hardware failure of one expert server (paper §5.4)."""
@@ -184,56 +201,24 @@ class ServingEngine:
     def scale_to(self, n: int) -> None:
         """Elastically resize the expert-server pool to ``n`` servers.
 
-        The pool re-plans its EPLB mapping (liveness preserved), the expert
-        weights are re-sharded from the recovered global bank, and the jitted
-        step variants are rebuilt for the new static server count.  In-flight
-        requests keep their KV cache — scaling never drops work (paper §5.3).
+        The pool re-plans its EPLB mapping (liveness preserved), the
+        executor re-shards the expert weights from the recovered global bank
+        and rebuilds its jitted variants for the new static server count
+        (the AOT-per-server-count story).  In-flight requests keep their KV
+        cache — scaling never drops work (paper §5.3).
         """
         if self.pool is None or n == self.pool.num_servers:
             return
         old = self.pool.num_servers
         self.pool.scale_to(n)
-        E = self.cfg.moe.num_experts
-        red = self.pool.redundant_table
-        self.params = _map_server_weights(
-            self.params,
-            lambda sw: expert_server.reshard_server_weights(sw, E, n, red))
-        self._rt0 = self.pool.runtime(self.ecfg.gemm_impl)
-        self._build_jits()
+        self.executor.resize(self.pool)
         self.metrics.events.append(
             {"t": self.clock, "event": "scale", "from": old, "to": n})
 
-    # --------------------------------------------------------------- slots
-    def _admit(self) -> None:
-        cap = self.ecfg.tp_batch_cap if self.ecfg.mode == "tp" else None
-        for b in range(len(self.slots)):
-            if cap is not None and b >= cap:
-                break
-            if self.slots[b] is None and self.queue:
-                self._prefill_into(b, self.queue.popleft())
-
-    def _prefill_into(self, b: int, req: Request) -> None:
-        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-        self.clk.start()
-        logits, cache_one = self._jit_prefill(self.params, tokens,
-                                              self._rt_arrays())
-        self.clock += self.clk.stop("prefill", result=logits,
-                                    tokens=tokens.shape[1],
-                                    servers=self._pool_size(),
-                                    alive_frac=self._alive_frac())
-        self.cache = jax.tree.map(
-            lambda big, one: _slot_write(big, one, b), self.cache, cache_one)
-        self._key, sk = jax.random.split(self._key)
-        first = int(sample(logits, req.sampling.temperature, sk)[0])
-        req.output_tokens.append(first)
-        req.prefill_time = self.clock
-        self.slots[b] = req
-        self.metrics.events.append(
-            {"t": self.clock, "event": "prefill", "rid": req.request_id})
-
     # ---------------------------------------------------------------- step
     def step(self) -> None:
-        """One engine iteration: admit, decode, retire."""
+        """One engine iteration: run whatever the scheduler plans next —
+        a prefill chunk, a decode step over the ready slots, or idle."""
         self.step_idx += 1
         if self.step_idx <= self.halted_until:
             # monolithic restart: time passes, no tokens are produced
@@ -241,31 +226,71 @@ class ServingEngine:
             self.metrics.timeline.append(
                 {"t": self.clock, "tokens": 0, "halted": True})
             return
-        self._admit()
-        active = [b for b, r in enumerate(self.slots) if r is not None]
-        if not active:
+        plan = self.scheduler.next_plan()
+        if isinstance(plan, PrefillChunk):
+            self._step_prefill(plan)
+        elif isinstance(plan, DecodeBatch):
+            self._step_decode(plan)
+        else:
             self.clock += self.clk.idle()
-            return
-        tokens = np.zeros((len(self.slots), 1), np.int32)
-        for b, r in enumerate(self.slots):
-            if r is not None:
-                tokens[b, 0] = r.output_tokens[-1]
+
+    def _step_prefill(self, plan: PrefillChunk) -> None:
+        req, b = plan.request, plan.slot
+        chunk = req.prompt[plan.start:plan.start + plan.length]
         self.clk.start()
-        logits, self.cache, expert_load = self._jit_decode(
-            self.params, jnp.asarray(tokens), self.cache, self._rt_arrays())
+        if plan.is_first and plan.is_last:
+            # whole prompt in one step — the pre-split prefill path
+            logits = self.executor.prefill(b, chunk)
+        else:
+            logits = self.executor.prefill_chunk(
+                b, chunk, plan.start,
+                is_first=plan.is_first, is_last=plan.is_last)
+        self.clock += self.clk.stop("prefill", result=logits,
+                                    tokens=plan.length,
+                                    servers=self._pool_size(),
+                                    alive_frac=self._alive_frac())
+        self.scheduler.prefill_advanced(b, plan.length)
+        if plan.is_last:
+            # same per-slot key the decode path uses (stored at admission),
+            # folded with token index 0 — one key-derivation site
+            key = jnp.asarray(self.scheduler.slot_keys[b])
+            first = int(sample(logits, req.sampling.temperature,
+                               jax.random.fold_in(key, 0))[0])
+            req.output_tokens.append(first)
+            req.prefill_time = self.clock
+            self.metrics.ttfts.append(self.clock - req.arrival_time)
+            self.metrics.events.append(
+                {"t": self.clock, "event": "prefill", "rid": req.request_id,
+                 "ttft": self.clock - req.arrival_time})
+
+    def _step_decode(self, plan: DecodeBatch) -> None:
+        sch = self.scheduler
+        B = len(sch.slots)
+        active = list(plan.slots)
+        tokens = np.zeros((B, 1), np.int32)
+        temps = np.zeros(B, np.float32)
+        steps = np.zeros(B, np.int32)
+        for b in active:
+            r = sch.slots[b]
+            tokens[b, 0] = r.output_tokens[-1]
+            temps[b] = r.sampling.temperature
+            steps[b] = len(r.output_tokens)
+        self.clk.start()
+        logits, expert_load = self.executor.decode(tokens)
         dt = self.clk.stop("decode", result=logits, tokens=len(active),
                            servers=self._pool_size(),
-                           alive_frac=self._alive_frac())
+                           alive_frac=self._alive_frac(),
+                           overlap=(self.ecfg.decode_mode == "pipelined"))
         self._last_decode_time = dt
         self.clock += dt
         if self.pool is not None:
             self.pool.observe_load(np.asarray(expert_load))
-        self._key, sk = jax.random.split(self._key)
-        next_tokens = np.asarray(sample(logits, 0.0, sk))
+        next_tokens = np.asarray(sample_batch(logits, temps,
+                                              sch.slot_keys, steps))
 
         produced = 0
         for b in active:
-            r = self.slots[b]
+            r = sch.slots[b]
             tok = int(next_tokens[b])
             r.output_tokens.append(tok)
             r.token_times.append(self.clock)
@@ -280,7 +305,7 @@ class ServingEngine:
                 r.finish_time = self.clock
                 self.metrics.completed += 1
                 self.metrics.itls.extend(r.itl())
-                self.slots[b] = None
+                sch.release(b)
         self.metrics.timeline.append(
             {"t": self.clock, "tokens": produced, "halted": False})
 
@@ -295,36 +320,3 @@ class ServingEngine:
             self.step()
         self.metrics.wall_time = self.clock
         return self.metrics
-
-
-def _map_server_weights(params, fn):
-    """Apply ``fn`` to every MoE layer's per-server weight dict in a params
-    tree (the ``{"moe": {"servers": ...}}`` sub-dicts), leaving everything
-    else untouched."""
-    if isinstance(params, dict):
-        out = {}
-        for k, v in params.items():
-            if k == "moe" and isinstance(v, dict) and "servers" in v:
-                out[k] = dict(v, servers=fn(v["servers"]))
-            else:
-                out[k] = _map_server_weights(v, fn)
-        return out
-    return params
-
-
-def _slot_write(big, one, b: int):
-    """Write a batch-1 cache pytree leaf into slot b of the engine cache.
-
-    The batch dim is the first one where `big` and `one` differ with
-    ``one == 1``.
-    """
-    if not hasattr(big, "shape"):
-        return big
-    if big.shape == getattr(one, "shape", None):
-        return one.astype(big.dtype)      # max_batch == 1: replace wholesale
-    for axis, (db, do) in enumerate(zip(big.shape, one.shape)):
-        if db != do and do == 1:
-            idx = [slice(None)] * big.ndim
-            idx[axis] = slice(b, b + 1)
-            return big.at[tuple(idx)].set(one.astype(big.dtype))
-    return big

@@ -1,0 +1,214 @@
+"""Jitted step execution — the executor half of the engine split.
+
+The :class:`Executor` owns the model params, the batched KV cache, the
+per-slot prefill staging caches, and the jitted step variants:
+
+* ``prefill``       — whole-prompt prefill into a fresh batch-1 cache
+  (the pre-split path; one compile per bucketed prompt length);
+* ``prefill_chunk`` — chunked-prefill continuation against a staging cache
+  (decoder family only; one compile per distinct chunk length);
+* ``decode``        — one token for the whole slot batch, in one of three
+  modes: ``lockstep`` (single full-batch step, the pre-split behaviour),
+  ``pipelined`` (two half-batch microbatches as *independent* subgraphs —
+  :func:`repro.core.overlap.split_batch_decode` — so the expert round-trip
+  of microbatch A overlaps the attention of microbatch B, paper §4.2), or
+  ``serialized`` (same split with an artificial dependency: the ablation
+  baseline, bit-identical outputs, collectives exposed).
+
+The expert→server mapping, liveness mask and local placement table remain
+jit *arguments*: failover and rebalancing never recompile.  A pool resize
+(:meth:`resize`) re-shards the expert weights and rebuilds the jits for the
+new static server count — the AOT-per-server-count story.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import expert_server
+from repro.core.overlap import split_batch_decode
+from repro.models.transformer import Model, ParallelCtx
+
+
+class Executor:
+    """Owns params + caches + jitted step variants for one engine."""
+
+    def __init__(self, model: Model, params, pool, *, max_batch: int,
+                 max_seq: int, gemm_impl: str = "xla_ragged",
+                 decode_mode: str = "lockstep"):
+        assert decode_mode in ("lockstep", "pipelined", "serialized"), \
+            decode_mode
+        if decode_mode != "lockstep":
+            if model.cache_batch_axis is None:
+                raise ValueError(
+                    f"decode_mode={decode_mode!r} needs a model family with "
+                    "a uniform cache batch axis (decoder-family only)")
+            if max_batch % 2:
+                raise ValueError(
+                    f"decode_mode={decode_mode!r} needs an even max_batch "
+                    f"(got {max_batch}) to form two microbatches")
+        self.model = model
+        self.params = params
+        self.pool = pool
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.gemm_impl = gemm_impl
+        self.decode_mode = decode_mode
+        self.cache = model.init_cache(max_batch, max_seq)
+        self._staging: Dict[int, object] = {}     # slot -> batch-1 cache
+        self._rt0 = pool.runtime(gemm_impl) if pool else None
+        self._build_jits()
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        return self.model.prefill_chunk is not None
+
+    # -------------------------------------------------------------- jits
+    def _build_jits(self) -> None:
+        """(Re)build the jitted step functions around the current ``_rt0``.
+
+        Static runtime fields (num_servers, capacity) are baked into the
+        closures, so a pool resize needs fresh variants; liveness/mapping
+        stay jit arguments and never recompile.
+        """
+        model, rt0 = self.model, self._rt0
+        gemm_impl, max_seq = self.gemm_impl, self.max_seq
+
+        def ctx_of(rt_arrays):
+            rt = None
+            if rt0 is not None:
+                mapping, alive, local = rt_arrays
+                rt = rt0._replace(mapping=mapping, alive=alive,
+                                  local_table=local)
+            return ParallelCtx(moe_runtime=rt, gemm_impl=gemm_impl,
+                               remat=False)
+
+        def prefill_fn(params, tokens, rt_arrays):
+            return model.prefill(params, tokens, ctx_of(rt_arrays),
+                                 max_slots=max_seq)
+
+        def decode_step(params, tokens, cache, rt_arrays):
+            return model.decode_step(params, tokens, cache,
+                                     ctx_of(rt_arrays))
+
+        def decode_fn(params, tokens, cache, rt_arrays):
+            if self.decode_mode == "lockstep":
+                logits, cache, st = decode_step(params, tokens, cache,
+                                                rt_arrays)
+            else:
+                logits, cache, st = split_batch_decode(
+                    lambda t, c: decode_step(params, t, c, rt_arrays),
+                    tokens, cache, axis=model.cache_batch_axis,
+                    enabled=(self.decode_mode == "pipelined"))
+            # per-expert token counts feed the pool's traffic EMA — this is
+            # what rebalance() and traffic-aware scale_to re-plan from
+            return logits, cache, st.expert_load
+
+        self._jit_prefill = jax.jit(prefill_fn)
+        self._jit_decode = jax.jit(decode_fn)
+        self._jit_chunk = None
+        if model.prefill_chunk is not None:
+            def chunk_fn(params, tokens, cache, start, rt_arrays):
+                return model.prefill_chunk(params, tokens, cache, start,
+                                           ctx_of(rt_arrays))
+            self._jit_chunk = jax.jit(chunk_fn)
+
+    def _rt_arrays(self):
+        if self.pool is None:
+            return ()
+        rt = self.pool.runtime(self.gemm_impl)
+        return (rt.mapping, rt.alive, rt.local_table)
+
+    # ------------------------------------------------------------ prefill
+    def prefill(self, slot: int, prompt: np.ndarray) -> jax.Array:
+        """Whole-prompt prefill straight into ``slot`` of the batch cache."""
+        tokens = jnp.asarray(prompt, jnp.int32)[None]
+        logits, cache_one = self._jit_prefill(self.params, tokens,
+                                              self._rt_arrays())
+        self.cache = jax.tree.map(
+            lambda big, one: _slot_write(big, one, slot),
+            self.cache, cache_one)
+        return logits
+
+    def prefill_chunk(self, slot: int, chunk: np.ndarray, start: int,
+                      *, is_first: bool, is_last: bool) -> jax.Array:
+        """One chunked-prefill continuation step for ``slot``.
+
+        Chunks accumulate in a batch-1 staging cache; the final chunk
+        commits the staging cache into the batch cache slot.
+        """
+        assert self._jit_chunk is not None, "model has no prefill_chunk"
+        if is_first:
+            self._staging[slot] = self.model.init_cache(1, self.max_seq)
+        tokens = jnp.asarray(chunk, jnp.int32)[None]
+        logits, staging = self._jit_chunk(
+            self.params, tokens, self._staging[slot],
+            jnp.asarray(start, jnp.int32), self._rt_arrays())
+        self._staging[slot] = staging
+        if is_last:
+            self.cache = jax.tree.map(
+                lambda big, one: _slot_write(big, one, slot),
+                self.cache, self._staging.pop(slot))
+        return logits
+
+    # ------------------------------------------------------------- decode
+    def decode(self, tokens: np.ndarray) -> Tuple[jax.Array, np.ndarray]:
+        """One decode step over the whole slot batch -> (logits, load)."""
+        logits, self.cache, expert_load = self._jit_decode(
+            self.params, jnp.asarray(tokens), self.cache, self._rt_arrays())
+        return logits, expert_load
+
+    # ------------------------------------------------------------- elastic
+    def resize(self, pool) -> None:
+        """Adopt a resized expert-server pool: re-shard the expert weights
+        from the recovered global bank and rebuild the jitted variants for
+        the new static server count.  The batch KV cache and any staging
+        caches are untouched — scaling never drops in-flight work."""
+        self.pool = pool
+        E = self.model.cfg.moe.num_experts
+        n = pool.num_servers
+        red = pool.redundant_table
+        self.params = _map_server_weights(
+            self.params,
+            lambda sw: expert_server.reshard_server_weights(sw, E, n, red))
+        self._rt0 = pool.runtime(self.gemm_impl)
+        self._build_jits()
+
+
+# ------------------------------------------------------------------ helpers
+
+def _map_server_weights(params, fn):
+    """Apply ``fn`` to every MoE layer's per-server weight dict in a params
+    tree (the ``{"moe": {"servers": ...}}`` sub-dicts), leaving everything
+    else untouched."""
+    if isinstance(params, dict):
+        out = {}
+        for k, v in params.items():
+            if k == "moe" and isinstance(v, dict) and "servers" in v:
+                out[k] = dict(v, servers=fn(v["servers"]))
+            else:
+                out[k] = _map_server_weights(v, fn)
+        return out
+    return params
+
+
+def _slot_write(big, one, b: int):
+    """Write a batch-1 cache pytree leaf into slot b of the engine cache.
+
+    The batch dim is the first one where `big` and `one` differ with
+    ``one == 1``.
+    """
+    if not hasattr(big, "shape"):
+        return big
+    if big.shape == getattr(one, "shape", None):
+        return one.astype(big.dtype)      # max_batch == 1: replace wholesale
+    for axis, (db, do) in enumerate(zip(big.shape, one.shape)):
+        if db != do and do == 1:
+            idx = [slice(None)] * big.ndim
+            idx[axis] = slice(b, b + 1)
+            return big.at[tuple(idx)].set(one.astype(big.dtype))
+    return big

@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
 from dataclasses import dataclass, field
@@ -18,6 +17,9 @@ class ServingMetrics:
     total_output_tokens: int = 0
     wall_time: float = 0.0
     itls: List[float] = field(default_factory=list)
+    # time-to-first-token per request (arrival -> first sampled token);
+    # chunked prefill's latency win shows up here and in max-ITL
+    ttfts: List[float] = field(default_factory=list)
     events: List[Dict] = field(default_factory=list)
     # per-interval decode throughput (for the fault-tolerance timeline)
     timeline: List[Dict] = field(default_factory=list)
@@ -28,12 +30,10 @@ class ServingMetrics:
         return self.total_output_tokens / max(self.wall_time, 1e-9)
 
     def itl_stats(self) -> Dict[str, float]:
-        if not self.itls:
-            return {"mean": 0.0, "p50": 0.0, "p99": 0.0}
-        a = np.asarray(self.itls)
-        return {"mean": float(a.mean()),
-                "p50": float(np.percentile(a, 50)),
-                "p99": float(np.percentile(a, 99))}
+        return _latency_stats(self.itls)
+
+    def ttft_stats(self) -> Dict[str, float]:
+        return _latency_stats(self.ttfts)
 
     def throughput_curve(self, bin_width: float) -> List[Tuple[float, float]]:
         """Decode throughput per time bin: [(bin midpoint, tok/s), ...].
@@ -74,6 +74,7 @@ class ServingMetrics:
             "tokens": self.total_output_tokens,
             "wall": self.wall_time,
             "itls": list(self.itls),
+            "ttfts": list(self.ttfts),
             "events": list(self.events),
             "timeline": list(self.timeline),
         })
@@ -88,4 +89,16 @@ class ServingMetrics:
             "wall_time_s": round(self.wall_time, 3),
             "decode_tok_per_s": round(self.decode_throughput, 2),
             "itl": {k: round(v * 1e3, 3) for k, v in self.itl_stats().items()},
+            "ttft": {k: round(v * 1e3, 3)
+                     for k, v in self.ttft_stats().items()},
         }
+
+
+def _latency_stats(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"mean": 0.0, "p50": 0.0, "p99": 0.0, "max": 0.0}
+    a = np.asarray(xs)
+    return {"mean": float(a.mean()),
+            "p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99)),
+            "max": float(a.max())}

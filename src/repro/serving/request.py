@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -32,6 +31,13 @@ class Request:
     @property
     def done(self) -> bool:
         return self.finish_time is not None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (arrival -> first sampled token)."""
+        if self.prefill_time is None:
+            return None
+        return self.prefill_time - self.arrival_time
 
     def itl(self) -> List[float]:
         """Inter-token latencies (seconds)."""

@@ -12,3 +12,24 @@ def sample(logits: jax.Array, temperature: float, key) -> jax.Array:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jax.random.categorical(key, logits / temperature, axis=-1).astype(
         jnp.int32)
+
+
+@jax.jit
+def sample_batch(logits: jax.Array, temperatures: jax.Array,
+                 keys: jax.Array, steps: jax.Array) -> jax.Array:
+    """Per-slot sampling honoring each request's SamplingParams.
+
+    logits: (B, V) fp32; temperatures: (B,) — ``<= 0`` rows are greedy;
+    keys: (B, 2) uint32 per-slot base keys (the request seed folded with the
+    request id at admission); steps: (B,) int32 tokens generated so far.
+    Each row's key is ``fold_in(key_b, step_b)``, so the sampled stream is a
+    pure function of (request seed, request id, token index) — replayable
+    regardless of batch composition or scheduling order.
+    """
+    step_keys = jax.vmap(jax.random.fold_in)(keys, steps)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    safe_t = jnp.where(temperatures > 0.0, temperatures, 1.0)
+    sampled = jax.vmap(
+        lambda lg, t, k: jax.random.categorical(k, lg / t))(
+            logits, safe_t, step_keys).astype(jnp.int32)
+    return jnp.where(temperatures > 0.0, sampled, greedy)

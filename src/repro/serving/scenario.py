@@ -29,7 +29,7 @@ thinning from a seeded generator — the trace depends only on
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -87,8 +87,8 @@ def sample_arrival_times(rate_fn: RateFn, horizon: float,
 @dataclass(frozen=True)
 class ScenarioEvent:
     t: float
-    kind: str                  # fail | recover | rebalance | scale_to
-    value: Optional[int] = None
+    kind: str        # fail | recover | rebalance | scale_to | set_policy
+    value: Optional[object] = None     # rank / pool size / policy name
 
 
 @dataclass
@@ -166,6 +166,12 @@ class Scenario:
         self.events.append(ScenarioEvent(float(t), "scale_to", n))
         return self
 
+    def set_policy(self, t: float, policy: str) -> "Scenario":
+        """Switch the engine's scheduling policy mid-run (e.g. flip to
+        ``fair`` when a burst of long prompts is about to land)."""
+        self.events.append(ScenarioEvent(float(t), "set_policy", policy))
+        return self
+
     def autoscale(self, autoscaler) -> "Scenario":
         """Attach an :class:`~repro.serving.autoscale.Autoscaler` policy loop
         (observed each step; scaling decisions become engine.scale_to)."""
@@ -239,5 +245,7 @@ class Scenario:
             engine.rebalance()
         elif ev.kind == "scale_to":
             engine.scale_to(ev.value)
+        elif ev.kind == "set_policy":
+            engine.set_policy(ev.value)
         else:
             raise ValueError(f"unknown scenario event {ev.kind!r}")

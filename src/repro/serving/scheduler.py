@@ -1,0 +1,177 @@
+"""Admission and step planning — the scheduler half of the engine split.
+
+The :class:`Scheduler` owns the request queue and the slot table and decides
+what the next engine step *is*: a prefill chunk, a decode step over the
+decode-ready slots, or idle.  It never touches params, caches or jitted
+functions — that is the :class:`~repro.serving.executor.Executor`'s side of
+the line — so policies stay pure host logic, trivially swappable and
+deterministic under a virtual clock.
+
+Chunked prefill (bounded TTFT *and* bounded ITL): a prompt is split into
+chunks of at most ``prefill_chunk`` tokens and each chunk is one engine
+step, so decode steps can interleave with a long prompt's admission instead
+of stalling behind it.  ``prefill_chunk=0`` reproduces the pre-split
+engine: whole prompts in one step.
+
+Policies (what runs when both prefill work and decode-ready slots exist):
+
+* ``prefill-priority`` (default, the pre-split behaviour): drain every
+  pending prefill chunk before decoding.  Best TTFT; under bursty arrivals
+  decode gaps grow with the whole prefill backlog.
+* ``fair``: strictly alternate — at most one prefill chunk between
+  consecutive decode steps, so the worst-case decode gap is one chunk, not
+  one backlog.  This is what makes chunked prefill's ITL bound real.
+* ``fcfs``: run-to-completion in arrival order — in-flight requests decode
+  to completion before any queued prompt is prefilled (the static-batching
+  baseline: best ITL, worst TTFT).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.serving.request import Request
+
+POLICIES = ("prefill-priority", "fair", "fcfs")
+
+
+@dataclass
+class SchedulerConfig:
+    max_batch: int
+    prefill_chunk: int = 0             # 0 = whole prompt in one step
+    policy: str = "prefill-priority"   # prefill-priority | fair | fcfs
+    batch_cap: Optional[int] = None    # TP weight-replication slot cap
+
+
+def _check_policy(policy: str) -> None:
+    if policy not in POLICIES:
+        raise ValueError(
+            f"unknown scheduling policy {policy!r}; expected one of "
+            f"{POLICIES}")
+
+
+# ------------------------------------------------------------------- plans
+
+@dataclass(frozen=True)
+class PrefillChunk:
+    """Run prompt positions [start, start+length) of ``request`` (slot b)."""
+    slot: int
+    request: Request
+    start: int
+    length: int
+    is_first: bool
+    is_last: bool
+
+
+@dataclass(frozen=True)
+class DecodeBatch:
+    """One decode step over the decode-ready slots."""
+    slots: Tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class Idle:
+    """Nothing to do — sweep the clock forward."""
+
+
+# --------------------------------------------------------------- scheduler
+
+class Scheduler:
+    """Slot admission + step planning over a fixed slot pool."""
+
+    def __init__(self, cfg: SchedulerConfig):
+        _check_policy(cfg.policy)
+        self.cfg = cfg
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * cfg.max_batch
+        # per-slot sampling keys: fold_in(PRNGKey(sampling.seed), request_id)
+        self.slot_keys = np.zeros((cfg.max_batch, 2), np.uint32)
+        # slot -> prompt tokens already prefilled (present = mid-prefill,
+        # i.e. NOT decode-ready); insertion order = admission order
+        self._progress: Dict[int, int] = {}
+        self._last_was_prefill = False
+
+    # ------------------------------------------------------------ control
+    def set_policy(self, policy: str) -> None:
+        _check_policy(policy)
+        self.cfg.policy = policy
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def release(self, slot: int) -> None:
+        """Free a slot whose request completed."""
+        self.slots[slot] = None
+        self._progress.pop(slot, None)
+
+    # ------------------------------------------------------------ signals
+    def decode_ready(self) -> List[int]:
+        return [b for b, r in enumerate(self.slots)
+                if r is not None and b not in self._progress]
+
+    def pending_prefill_tokens(self) -> int:
+        """Prompt tokens not yet prefilled (queued + mid-chunk backlog) —
+        the autoscaler's prefill-pressure signal."""
+        queued = sum(len(r.prompt) for r in self.queue)
+        inflight = sum(len(self.slots[b].prompt) - done
+                       for b, done in self._progress.items())
+        return queued + inflight
+
+    # ----------------------------------------------------------- planning
+    def _admit(self) -> None:
+        cap = self.cfg.batch_cap
+        for b in range(len(self.slots)):
+            if cap is not None and b >= cap:
+                break
+            if self.slots[b] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[b] = req
+                self._progress[b] = 0
+                self.slot_keys[b] = np.asarray(jax.random.fold_in(
+                    jax.random.PRNGKey(req.sampling.seed), req.request_id))
+
+    def _chunk_plan(self) -> PrefillChunk:
+        b, done = next(iter(self._progress.items()))
+        req = self.slots[b]
+        total = len(req.prompt)
+        chunk = self.cfg.prefill_chunk or total
+        length = min(chunk, total - done)
+        return PrefillChunk(slot=b, request=req, start=done, length=length,
+                            is_first=(done == 0),
+                            is_last=(done + length >= total))
+
+    def next_plan(self):
+        """Admit what fits, then pick the next step per the active policy."""
+        self._admit()
+        pending = bool(self._progress)
+        ready = self.decode_ready()
+        policy = self.cfg.policy
+        if pending and ready:
+            if policy == "prefill-priority":
+                do_prefill = True
+            elif policy == "fcfs":
+                do_prefill = False
+            else:                        # fair: strict alternation
+                do_prefill = not self._last_was_prefill
+        else:
+            do_prefill = pending
+        if do_prefill:
+            self._last_was_prefill = True
+            return self._chunk_plan()
+        self._last_was_prefill = False
+        if ready:
+            return DecodeBatch(slots=tuple(ready))
+        return Idle()
+
+    def prefill_advanced(self, slot: int, length: int) -> bool:
+        """Record chunk completion; True when the slot became decode-ready."""
+        self._progress[slot] += length
+        if self._progress[slot] >= len(self.slots[slot].prompt):
+            del self._progress[slot]
+            return True
+        return False

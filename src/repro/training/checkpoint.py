@@ -13,7 +13,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import numpy as np

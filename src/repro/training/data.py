@@ -6,9 +6,8 @@ sharded host-batch loader for training.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

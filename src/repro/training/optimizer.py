@@ -7,8 +7,7 @@ Functional API:  ``opt.init(params) -> state``;
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

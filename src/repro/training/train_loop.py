@@ -9,7 +9,6 @@ optimization knob for scale (EXPERIMENTS.md §Perf).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax

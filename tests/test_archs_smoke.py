@@ -12,7 +12,7 @@ from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.core.moe_layer import default_runtime
 from repro.models.transformer import ParallelCtx, build_model
 from repro.training.optimizer import adamw
-from repro.training.train_loop import TrainState, init_train_state, make_train_step
+from repro.training.train_loop import init_train_state, make_train_step
 
 
 def _setup(arch):

@@ -3,7 +3,6 @@ probe extrapolation, input specs, cache sharding specs, applicability."""
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import ALL_SHAPES, ASSIGNED_ARCHS, applicable, get_config, shape_by_name
 

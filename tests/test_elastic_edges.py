@@ -11,7 +11,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import expert_server
 from repro.core.elastic import ServerPool, provision, resource_saving
 from repro.core.expert_server import (ServerWeights, build_server_weights,
                                       extract_bank, make_local_table,

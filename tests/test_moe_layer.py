@@ -4,12 +4,10 @@ invariance, failover correctness, monolithic equivalence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.core import expert_server, moe_layer as eaas
-from repro.core.monolithic import (init_monolithic_ep, monolithic_ep_apply,
-                                   monolithic_runtime)
+from repro.core.monolithic import monolithic_ep_apply, monolithic_runtime
 from repro.core import load_balance, mapping as emap
 
 

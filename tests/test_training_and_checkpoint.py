@@ -9,14 +9,13 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core.moe_layer import default_runtime
 from repro.models.transformer import ParallelCtx, build_model
 from repro.training import checkpoint as ckpt
 from repro.training.data import ShareGPTLike, synthetic_lm_batches
 from repro.training.optimizer import (adafactor, adamw, clip_by_global_norm,
                                       cosine_schedule)
-from repro.training.train_loop import (TrainState, init_train_state,
-                                       make_train_step, train_loop)
+from repro.training.train_loop import (
+    TrainState, init_train_state, make_train_step)
 
 
 def _tiny_model():
