@@ -12,7 +12,8 @@ import traceback
 def main() -> None:
     fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
     from benchmarks import (ablation, comm, fault_tolerance, latency,
-                            overlap_ablation, roofline, scaling, throughput)
+                            overlap_ablation, paged_kv, roofline, scaling,
+                            throughput)
 
     suites = [("fig12_comm", comm.main),
               ("fig13_ablation", ablation.main),
@@ -22,7 +23,8 @@ def main() -> None:
                   ("fig8_overlap_ablation", overlap_ablation.main),
                   ("fig9_latency", latency.main),
                   ("fig10_fault_tolerance", fault_tolerance.main),
-                  ("fig11_scaling", scaling.main)] + suites
+                  ("fig11_scaling", scaling.main),
+                  ("paged_kv", paged_kv.main)] + suites
 
     print("name,us_per_call,derived")
     failures = 0

@@ -4,6 +4,8 @@ engine, inject a hardware failure mid-run, rebalance hot experts, and print
 throughput / inter-token-latency metrics.
 
 Run:  PYTHONPATH=src python examples/serve_moe.py [--requests 16]
+      PYTHONPATH=src python examples/serve_moe.py --kv-mode paged \
+          [--kv-blocks 13]    # paged KV; small pools exercise preemption
 """
 
 import argparse
@@ -20,11 +22,21 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--mode", default="eaas",
                     choices=["eaas", "monolithic_ep", "tp"])
+    ap.add_argument("--kv-mode", default="dense", choices=["dense", "paged"],
+                    help="paged = block-pool KV cache with prefix caching")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="pool size in blocks (default: no memory pressure; "
+                         "shrink to exercise admission gating + preemption)")
     args = ap.parse_args()
 
     cfg = get_config("deepseek-r1").reduced()
     ecfg = EngineConfig(mode=args.mode, num_servers=4, max_batch=4,
-                        max_seq=96, n_redundant=2)
+                        max_seq=96, n_redundant=2,
+                        kv_mode=args.kv_mode, kv_block_size=8,
+                        kv_num_blocks=args.kv_blocks,
+                        # paged prefill runs the chunk path; chunking also
+                        # bounds decode gaps while long prompts admit
+                        prefill_chunk=(8 if args.kv_mode == "paged" else 0))
     eng = ServingEngine(cfg, ecfg, seed=0)
 
     # ShareGPT-like workload (bucketed prompt lengths bound prefill compiles)
@@ -53,6 +65,10 @@ def main():
         print(f"  {k}: {v}")
     halted = sum(1 for t in metrics.timeline if t.get("halted"))
     print(f"  halted steps: {halted}")
+    if eng.kv_pool is not None:
+        print(f"  kv pool: {eng.kv_pool.usable_blocks} blocks x "
+              f"{eng.kv_pool.block_size} tokens, "
+              f"free fraction {eng.kv_pool.free_fraction():.2f}")
     assert metrics.completed == args.requests
 
 

@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import compiler_params
 
 
 def _kernel(x_ref, w_ref, o_ref):
@@ -34,8 +35,6 @@ def combine_weighted_pallas(x: jax.Array, w: jax.Array, *, tt: int = 128,
         ],
         out_specs=pl.BlockSpec((tt, td), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel"),
-        ),
+        compiler_params=compiler_params(("parallel", "parallel")),
         interpret=interpret,
     )(x, w)

@@ -1,0 +1,19 @@
+"""Version shims for the Pallas TPU surface.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` across
+jax releases; the kernels target the new name and fall back to the old one
+so interpret-mode tests run on whichever jax the environment ships.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def compiler_params(dimension_semantics) -> object:
+    """Build compiler params with the given dimension semantics, on either
+    side of the ``TPUCompilerParams`` -> ``CompilerParams`` rename."""
+    return _CompilerParams(dimension_semantics=tuple(dimension_semantics))

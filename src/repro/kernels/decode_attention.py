@@ -1,9 +1,20 @@
-"""Pallas TPU flash-decode kernel: one-token GQA attention over a KV cache.
+"""Pallas TPU flash-decode kernels: one-token GQA attention over a KV cache.
 
 The attention client's hot loop during decoding.  Online-softmax over KV
 blocks; grid = (batch, kv_heads, seq_blocks) with the sequence dimension
 innermost so the (G, hd) accumulator lives in VMEM scratch across blocks.
 Sequence lengths arrive via scalar prefetch; padded cache slots are masked.
+
+Two variants share the kernel body:
+
+* :func:`flash_decode_pallas` — dense per-sequence cache
+  ``(B, S, KV, hd)``; KV block ``s`` of sequence ``b`` is just the
+  contiguous slice at ``s``.
+* :func:`paged_flash_decode_pallas` — block-pool cache: all sequences share
+  one pool ``(num_blocks, bs, KV, hd)`` and each sequence names its blocks
+  through a ``(B, max_blocks)`` block table.  The table rides scalar
+  prefetch, so the *index map* gathers: grid step ``(b, kv, s)`` DMAs pool
+  block ``tables[b, s]`` — the kernel body never sees the indirection.
 
 VMEM per step: TS·hd (k) + TS·hd (v) + G·hd (q) + G·hd·4 (acc) — for
 TS=512, hd=128, G=8: ~0.5 MiB.
@@ -18,6 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import compiler_params
 
 NEG = -1e30
 
@@ -93,9 +106,69 @@ def flash_decode_pallas(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
+        compiler_params=compiler_params(
+            ("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(B, H, hd)
+
+
+def _paged_kernel(tables, lengths, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, ts: int, n_s: int, scale: float):
+    # the block table is consumed by the index maps; the body is the dense
+    # online-softmax kernel (view lane j of sequence b == position j)
+    _kernel(lengths, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            ts=ts, n_s=n_s, scale=scale)
+
+
+def paged_flash_decode_pallas(q: jax.Array, k_pool: jax.Array,
+                              v_pool: jax.Array, block_tables: jax.Array,
+                              lengths: jax.Array, *,
+                              interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k/v_pool: (num_blocks, bs, KV, hd);
+    block_tables: (B, max_blocks) int32; lengths: (B,) >= 1.
+
+    Sequence ``b``'s position ``p`` lives in pool block
+    ``block_tables[b, p // bs]`` at offset ``p % bs``; positions at or past
+    ``lengths[b]`` are masked.  Returns (B, H, hd) — numerically the dense
+    :func:`flash_decode_pallas` over the gathered view.
+    """
+    B, H, hd = q.shape
+    _, bs, KV, _ = k_pool.shape
+    _, n_s = block_tables.shape
+    G = H // KV
+    assert G * KV == H, (H, KV)
+    qg = q.reshape(B, KV, G, hd)
+
+    kernel = functools.partial(_paged_kernel, ts=bs, n_s=n_s,
+                               scale=1.0 / np.sqrt(hd))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KV, n_s),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd),
+                             lambda b, kv, s, T, L: (b, kv, 0, 0)),
+                # the paged gather: block s of sequence b is pool block
+                # T[b, s] — the DMA indirection lives in the index map
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, kv, s, T, L: (T[b, s], 0, kv, 0)),
+                pl.BlockSpec((1, bs, 1, hd),
+                             lambda b, kv, s, T, L: (T[b, s], 0, kv, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd),
+                                   lambda b, kv, s, T, L: (b, kv, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, hd), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=compiler_params(
+            ("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pool, v_pool)
     return out.reshape(B, H, hd)

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as kref
 from repro.kernels.combine import combine_weighted_pallas
-from repro.kernels.decode_attention import flash_decode_pallas
+from repro.kernels.decode_attention import (flash_decode_pallas,
+                                            paged_flash_decode_pallas)
 from repro.kernels.grouped_gemm import grouped_gemm_pallas
 
 _DEFAULT_IMPL: Optional[str] = None
@@ -122,6 +123,21 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         return flash_decode_pallas(q, k_cache, v_cache, lengths, ts=ts,
                                    interpret=(impl == "pallas_interpret"))
     raise ValueError(f"unknown flash_decode impl {impl!r}")
+
+
+def paged_flash_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                       block_tables: jax.Array, lengths: jax.Array, *,
+                       impl: str = "auto") -> jax.Array:
+    """Flash decode over a shared block pool gathered through block tables."""
+    impl = _resolve(impl)
+    if impl in ("ref", "xla_ragged", "xla_dense"):
+        return kref.paged_flash_decode_ref(q, k_pool, v_pool, block_tables,
+                                           lengths)
+    if impl in ("pallas", "pallas_interpret"):
+        return paged_flash_decode_pallas(
+            q, k_pool, v_pool, block_tables, lengths,
+            interpret=(impl == "pallas_interpret"))
+    raise ValueError(f"unknown paged_flash_decode impl {impl!r}")
 
 
 # -------------------------------------------------------------------- combine

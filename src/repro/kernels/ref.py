@@ -56,6 +56,25 @@ def flash_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_flash_decode_ref(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array) -> jax.Array:
+    """Paged flash-decode oracle: gather the block-table view, then run the
+    dense oracle.
+
+    q: (B, H, hd); k/v_pool: (num_blocks, bs, KV, hd);
+    block_tables: (B, max_blocks) int32; lengths: (B,) >= 1.
+    Sequence ``b``'s view lane ``p`` is pool block ``block_tables[b, p//bs]``
+    offset ``p % bs``; lanes at or past ``lengths[b]`` are masked.
+    """
+    B = q.shape[0]
+    nb, bs, KV, hd = k_pool.shape
+    mb = block_tables.shape[1]
+    kv = k_pool[block_tables].reshape(B, mb * bs, KV, hd)
+    vv = v_pool[block_tables].reshape(B, mb * bs, KV, hd)
+    return flash_decode_ref(q, kv, vv, lengths)
+
+
 def combine_weighted_ref(x: jax.Array, w: jax.Array) -> jax.Array:
     """Fused top-k combine oracle: x (T, k, d), w (T, k) -> (T, d)."""
     return jnp.einsum("tkd,tk->td", x.astype(jnp.float32),

@@ -154,8 +154,8 @@ def _chunked_core(cfg, q, k, v, positions, *, is_local, causal,
 # ------------------------------------------------------------ chunk prefill
 
 def chunk_attention(params: Dict, cfg: ModelConfig, x: jax.Array,
-                    cache: kvc.KVCache, positions: jax.Array, *,
-                    mrope_positions=None) -> Tuple[jax.Array, kvc.KVCache]:
+                    cache, positions: jax.Array, *,
+                    mrope_positions=None):
     """Prefill one prompt *chunk* against the cache (chunked prefill).
 
     x: (batch, chunk, d_model); positions: (chunk,) global token positions
@@ -164,6 +164,12 @@ def chunk_attention(params: Dict, cfg: ModelConfig, x: jax.Array,
     cached position ``<=`` their own — earlier chunks included — so the
     result matches a single full-prompt prefill (slots beyond the causal
     frontier are masked; masked lanes contribute exact zeros).
+
+    ``cache`` may be a dense :class:`~repro.models.kv_cache.KVCache` or a
+    :class:`~repro.models.kv_cache.PagedKVCache`; the paged branch writes
+    through the block table and attends over the gathered view — including
+    prefix-cache blocks written by an *earlier* request, which is how a
+    prefix hit lets the chunk start mid-prompt.
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -176,11 +182,16 @@ def chunk_attention(params: Dict, cfg: ModelConfig, x: jax.Array,
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
 
-    cache = kvc.write_chunk(cache, k, v, positions[0])
-    slots = cache.k.shape[1]
+    if isinstance(cache, kvc.PagedKVCache):
+        cache = kvc.paged_write_chunk(cache, k, v, positions[0])
+        ck, cv = kvc.gather_blocks(cache)
+    else:
+        cache = kvc.write_chunk(cache, k, v, positions[0])
+        ck, cv = cache.k, cache.v
+    slots = ck.shape[1]
     k_pos = jnp.broadcast_to(jnp.arange(slots, dtype=jnp.int32)[None],
                              (b, slots))
-    out = _dense_core(cfg, q, cache.k, cache.v, pos_b, k_pos,
+    out = _dense_core(cfg, q, ck, cv, pos_b, k_pos,
                       is_local=False, causal=True)
     out = out.reshape(b, s, h * hd).astype(x.dtype) @ params["wo"]
     return out, cache
@@ -189,9 +200,16 @@ def chunk_attention(params: Dict, cfg: ModelConfig, x: jax.Array,
 # ------------------------------------------------------------------- decode
 
 def decode_attention(params: Dict, cfg: ModelConfig, x: jax.Array,
-                     cache: kvc.KVCache, *, is_local: bool = False,
-                     mrope_positions=None) -> Tuple[jax.Array, kvc.KVCache]:
+                     cache, *, is_local: bool = False,
+                     mrope_positions=None):
     """One-token decode: x (batch, 1, d_model) against the cache.
+
+    ``cache`` may be dense or paged (:class:`~repro.models.kv_cache
+    .PagedKVCache`); the paged branch appends through the block table and
+    attends over the gathered view — lane-for-lane the dense math when the
+    view width equals the dense slot count, so greedy outputs match
+    bitwise.  (Sliding-window ``is_local`` layers are dense-only; the
+    serving engine pages the uniform decoder family.)
 
     Returns (output (batch, 1, d_model), updated cache).
     """
@@ -206,14 +224,20 @@ def decode_attention(params: Dict, cfg: ModelConfig, x: jax.Array,
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
 
-    cache = kvc.append_decode(cache, k, v)
-    scores = _gqa_scores(q, cache.k) / math.sqrt(hd)   # (b,KV,G,1,slots)
+    if isinstance(cache, kvc.PagedKVCache):
+        cache = kvc.paged_append_decode(cache, k, v)
+        ck, cv = kvc.gather_blocks(cache)
+        mask = kvc.paged_valid_mask(cache)[:, None, None, None, :]
+    else:
+        cache = kvc.append_decode(cache, k, v)
+        ck, cv = cache.k, cache.v
+        mask = kvc.valid_mask(cache)[:, None, None, None, :]
+    scores = _gqa_scores(q, ck) / math.sqrt(hd)        # (b,KV,G,1,slots)
     if cfg.attn_logit_softcap:
         scores = softcap(scores, cfg.attn_logit_softcap)
-    mask = kvc.valid_mask(cache)[:, None, None, None, :]
     scores = jnp.where(mask, scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
-    out = _gqa_out(p, cache.v).astype(x.dtype)
+    out = _gqa_out(p, cv).astype(x.dtype)
     return out.reshape(b, 1, h * hd) @ params["wo"], cache
 
 

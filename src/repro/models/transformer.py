@@ -540,6 +540,10 @@ class Model(NamedTuple):
     # batch axis shared by every cache leaf (for microbatch splits in the
     # serving executor); None when the cache layout is heterogeneous.
     cache_batch_axis: Optional[int] = None
+    # block-pool cache builder: (num_blocks, block_size, batch, max_slots,
+    # abstract=False) -> cache pytree of stacked PagedKVCaches.  None for
+    # families without paged-cache support (ring caches, recurrent states).
+    init_paged_cache: Optional[Callable] = None
 
 
 def _positions(tokens: jax.Array) -> jax.Array:
@@ -630,6 +634,22 @@ def _build_decoder(cfg: ModelConfig, num_servers: int,
             cache["dense"] = stack(n_dense_prefix)
         return cache
 
+    def init_paged_cache(num_blocks: int, block_size: int, batch: int,
+                         max_slots: int, abstract: bool = False):
+        """Block-pool cache: every layer gets its own pool; one logical
+        block id addresses the same slot of every layer's pool, so the host
+        keeps a single block table per sequence."""
+        assert max_slots % block_size == 0, (max_slots, block_size)
+
+        def stack(n):
+            return _stack_paged_kv_cache(
+                n, num_blocks, block_size, batch, max_slots // block_size,
+                cfg.num_kv_heads, cfg.head_dim, dt, abstract=abstract)
+        cache = {"blocks": stack(n_main)}
+        if n_dense_prefix:
+            cache["dense"] = stack(n_dense_prefix)
+        return cache
+
     def prefill(params, tokens, ctx: ParallelCtx, batch=None,
                 max_slots: Optional[int] = None):
         B, S = tokens.shape
@@ -692,7 +712,7 @@ def _build_decoder(cfg: ModelConfig, num_servers: int,
 
     return Model(cfg, init_params, loss_fn, prefill, decode_step, init_cache,
                  num_servers, prefill_chunk=prefill_chunk,
-                 cache_batch_axis=1)
+                 cache_batch_axis=1, init_paged_cache=init_paged_cache)
 
 
 def _stack_kv_cache(n: int, batch: int, max_slots: int, kv_heads: int,
@@ -707,6 +727,27 @@ def _stack_kv_cache(n: int, batch: int, max_slots: int, kv_heads: int,
         lift = lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy()
     return kvc.KVCache(k=lift(c.k), v=lift(c.v), length=lift(c.length),
                        window=c.window)
+
+
+def _stack_paged_kv_cache(n: int, num_blocks: int, block_size: int,
+                          batch: int, max_blocks: int, kv_heads: int,
+                          head_dim: int, dtype, *,
+                          abstract: bool = False) -> kvc.PagedKVCache:
+    """A stacked (n, ...) PagedKVCache for scan-over-layers stacks.
+
+    Block tables / lengths are broadcast per layer so every leaf carries the
+    leading layer dim the scan needs; the executor rewrites them from the
+    host-side pool each step."""
+    mk = kvc.paged_kv_cache_spec if abstract else kvc.init_paged_kv_cache
+    c = mk(num_blocks, block_size, batch, max_blocks, kv_heads, head_dim,
+           dtype)
+    if abstract:
+        lift = lambda a: jax.ShapeDtypeStruct((n,) + a.shape, a.dtype)
+    else:
+        lift = lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy()
+    return kvc.PagedKVCache(k=lift(c.k), v=lift(c.v),
+                            block_tables=lift(c.block_tables),
+                            length=lift(c.length), block_size=c.block_size)
 
 
 # --------------------------------------------------- gemma3: 5 local : 1 global

@@ -1,13 +1,16 @@
 """Serving runtime, split into scheduler / executor / engine layers:
-admission + step policy (``scheduler``), params + caches + jitted step
-variants incl. chunked prefill and two-microbatch pipelined decode
-(``executor``), and the orchestrating ``ServingEngine`` with the
-failover/rebalance/scale control plane.  Plus the host-level physically-
-disaggregated engine (paper-literal buffer protocol) and the deterministic
-scenario/autoscaling harness the paper's timeline claims are tested with."""
+admission + step policy (``scheduler``, memory-aware over the paged-KV
+``kv_pool`` block manager: prefix caching, copy-on-write, preemption),
+params + caches + jitted step variants incl. chunked prefill, paged
+block-pool caches and two-microbatch pipelined decode (``executor``), and
+the orchestrating ``ServingEngine`` with the failover/rebalance/scale
+control plane.  Plus the host-level physically-disaggregated engine
+(paper-literal buffer protocol) and the deterministic scenario/autoscaling
+harness the paper's timeline claims are tested with."""
 
 from repro.serving.engine import ServingEngine, EngineConfig  # noqa: F401
 from repro.serving.executor import Executor  # noqa: F401
+from repro.serving.kv_pool import BlockPool, block_hashes  # noqa: F401
 from repro.serving.request import Request, SamplingParams  # noqa: F401
 from repro.serving.clock import Clock, VirtualClock, WallClock  # noqa: F401
 from repro.serving.scenario import Scenario, ScenarioResult  # noqa: F401

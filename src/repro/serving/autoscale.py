@@ -36,6 +36,12 @@ class AutoscalerConfig:
     # mid-chunk backlog) — with chunked prefill a deep prompt backlog is
     # visible before it converts into queue depth (0 disables)
     prefill_tokens_per_server: float = 0.0
+    # scale up while the KV block pool's free fraction sits below this
+    # threshold (0 disables).  Memory pressure precedes admission stalls:
+    # the pool drains *before* the queue backs up, so this knob fires a
+    # step earlier than queue/backlog pressure — the paper's point that
+    # attention-tier memory, not expert FLOPs, caps admitted traffic.
+    kv_pressure_threshold: float = 0.0
 
 
 class Autoscaler:
@@ -61,7 +67,8 @@ class Autoscaler:
 
     # -------------------------------------------------------------- policy
     def desired_servers(self, t: float, queue_depth: int,
-                        prefill_backlog: int = 0) -> int:
+                        prefill_backlog: int = 0,
+                        kv_free_fraction: float = 1.0) -> int:
         c = self.cfg
         n = provision(self.observed_rate(t), c.rate_per_server,
                       c.granularity)
@@ -69,6 +76,9 @@ class Autoscaler:
             n += int(queue_depth / c.queue_per_server)
         if c.prefill_tokens_per_server > 0 and prefill_backlog > 0:
             n += int(prefill_backlog / c.prefill_tokens_per_server)
+        if (c.kv_pressure_threshold > 0
+                and kv_free_fraction < c.kv_pressure_threshold):
+            n += 1
         return max(c.min_servers, min(c.max_servers, n))
 
     def step(self, engine, t: float) -> Optional[int]:
@@ -80,7 +90,10 @@ class Autoscaler:
         backlog = 0
         if self.cfg.prefill_tokens_per_server > 0:
             backlog = engine.scheduler.pending_prefill_tokens()
-        want = self.desired_servers(t, len(engine.queue), backlog)
+        kv_free = 1.0
+        if self.cfg.kv_pressure_threshold > 0:
+            kv_free = engine.scheduler.kv_free_fraction()
+        want = self.desired_servers(t, len(engine.queue), backlog, kv_free)
         # snap up to the nearest pool size the expert layout supports
         feasible = [n for n in engine.pool.feasible_counts()
                     if n <= self.cfg.max_servers]

@@ -53,6 +53,7 @@ from repro.core.monitor import Monitor
 from repro.models.transformer import build_model
 from repro.serving.clock import Clock, WallClock
 from repro.serving.executor import Executor
+from repro.serving.kv_pool import BlockPool
 from repro.serving.metrics import ServingMetrics
 from repro.serving.request import Request
 from repro.serving.sampling import sample, sample_batch
@@ -87,6 +88,18 @@ class EngineConfig:
     # max_batch, the seed behaviour — raise it when prefill chunks carry
     # more tokens than a decode batch so fixed-capacity buffers don't drop
     pool_tokens_per_client: Optional[int] = None
+    # --- KV-cache knobs --------------------------------------------------
+    # dense (per-slot (batch, max_seq) buffers, the seed behaviour) | paged
+    # (shared block pool + per-request block tables, prefix caching,
+    # memory-aware admission and preemption)
+    kv_mode: str = "dense"
+    kv_block_size: int = 16
+    # pool size in blocks; default sizes the pool so every slot can reach
+    # max_seq (no memory pressure) — shrink it to oversubscribe.  Must hold
+    # at least one maximal request (max_seq/kv_block_size blocks + scratch)
+    # or preemption could not keep the engine live.
+    kv_num_blocks: Optional[int] = None
+    kv_prefix_cache: bool = True
 
 
 class ServingEngine:
@@ -116,18 +129,39 @@ class ServingEngine:
         if self.pool:
             self.monitor.subscribe_server_down(self.pool.server_failed)
 
+        self.kv_pool: Optional[BlockPool] = None
+        if engine_cfg.kv_mode == "paged":
+            bs = engine_cfg.kv_block_size
+            if engine_cfg.max_seq % bs:
+                raise ValueError(f"max_seq={engine_cfg.max_seq} must be a "
+                                 f"multiple of kv_block_size={bs}")
+            per_seq = engine_cfg.max_seq // bs
+            nb = (engine_cfg.kv_num_blocks
+                  if engine_cfg.kv_num_blocks is not None
+                  else engine_cfg.max_batch * per_seq + 1)
+            if nb - 1 < per_seq:
+                raise ValueError(
+                    f"kv_num_blocks={nb} cannot hold one maximal request "
+                    f"({per_seq} blocks + 1 scratch) — preemption could "
+                    "not keep the engine live")
+            self.kv_pool = BlockPool(
+                nb, bs, enable_prefix_cache=engine_cfg.kv_prefix_cache)
         self.executor = Executor(
             self.model, params, self.pool,
             max_batch=engine_cfg.max_batch, max_seq=engine_cfg.max_seq,
             gemm_impl=engine_cfg.gemm_impl,
-            decode_mode=engine_cfg.decode_mode)
+            decode_mode=engine_cfg.decode_mode,
+            kv_mode=engine_cfg.kv_mode,
+            kv_block_size=engine_cfg.kv_block_size,
+            kv_num_blocks=(self.kv_pool.num_blocks if self.kv_pool else 0))
         chunk = (engine_cfg.prefill_chunk
                  if self.executor.supports_chunked_prefill else 0)
         self.scheduler = Scheduler(SchedulerConfig(
             max_batch=engine_cfg.max_batch, prefill_chunk=chunk,
             policy=engine_cfg.policy,
             batch_cap=(engine_cfg.tp_batch_cap
-                       if engine_cfg.mode == "tp" else None)))
+                       if engine_cfg.mode == "tp" else None),
+            max_seq=engine_cfg.max_seq), kv_pool=self.kv_pool)
 
         self.metrics = ServingMetrics()
         self.step_idx = 0
@@ -233,12 +267,23 @@ class ServingEngine:
             self._step_decode(plan)
         else:
             self.clock += self.clk.idle()
+        if self.kv_pool is not None:
+            self.metrics.observe_kv(self.kv_pool,
+                                    self.scheduler.preemptions)
 
     def _step_prefill(self, plan: PrefillChunk) -> None:
         req, b = plan.request, plan.slot
-        chunk = req.prompt[plan.start:plan.start + plan.length]
+        chunk = (plan.tokens if plan.tokens is not None
+                 else req.prompt[plan.start:plan.start + plan.length])
         self.clk.start()
-        if plan.is_first and plan.is_last:
+        if self.kv_pool is not None:
+            # paged: every prefill runs the chunk path against the block
+            # pool (prefix hits start mid-prompt; the virtual clock is
+            # charged only the uncached tokens in ``plan.length``)
+            self.executor.copy_blocks(plan.copies)     # pending COW forks
+            logits = self.executor.prefill_chunk_paged(
+                chunk, plan.start, self.scheduler.block_tables[b])
+        elif plan.is_first and plan.is_last:
             # whole prompt in one step — the pre-split prefill path
             logits = self.executor.prefill(b, chunk)
         else:
@@ -250,9 +295,11 @@ class ServingEngine:
                                     servers=self._pool_size(),
                                     alive_frac=self._alive_frac())
         self.scheduler.prefill_advanced(b, plan.length)
-        if plan.is_last:
+        if plan.is_last and not req.output_tokens:
             # same per-slot key the decode path uses (stored at admission),
-            # folded with token index 0 — one key-derivation site
+            # folded with token index 0 — one key-derivation site.  A
+            # *resumed* (preempted) request already holds its next input
+            # token, so recompute prefills skip sampling and TTFT.
             key = jnp.asarray(self.scheduler.slot_keys[b])
             first = int(sample(logits, req.sampling.temperature,
                                jax.random.fold_in(key, 0))[0])
@@ -276,7 +323,12 @@ class ServingEngine:
             temps[b] = r.sampling.temperature
             steps[b] = len(r.output_tokens)
         self.clk.start()
-        logits, expert_load = self.executor.decode(tokens)
+        if self.kv_pool is not None:
+            logits, expert_load = self.executor.decode_paged(
+                tokens, self.scheduler.block_tables,
+                self.scheduler.cache_lengths())
+        else:
+            logits, expert_load = self.executor.decode(tokens)
         dt = self.clk.stop("decode", result=logits, tokens=len(active),
                            servers=self._pool_size(),
                            alive_frac=self._alive_frac(),

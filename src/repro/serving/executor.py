@@ -15,6 +15,16 @@ per-slot prefill staging caches, and the jitted step variants:
   ``serialized`` (same split with an artificial dependency: the ablation
   baseline, bit-identical outputs, collectives exposed).
 
+``kv_mode="paged"`` swaps the dense per-slot cache for the block-pool
+cache: one shared pool per layer plus per-slot block tables owned by the
+host-side scheduler.  Block tables and lengths are jit *arguments* (data,
+not structure) — admission, prefix-cache sharing and preemption rewrite
+them between steps without recompiling.  All paged prefill goes through the
+chunk path (prefix-cache hits start chunks mid-prompt; there is no staging
+cache — pool blocks are the real storage), and paged decode is
+lockstep-only (the pool is shared across the batch, so a microbatch split
+has no batch axis to cut).
+
 The expert→server mapping, liveness mask and local placement table remain
 jit *arguments*: failover and rebalancing never recompile.  A pool resize
 (:meth:`resize`) re-shards the expert weights and rebuilds the jits for the
@@ -23,6 +33,7 @@ new static server count — the AOT-per-server-count story.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Tuple
 
 import jax
@@ -31,6 +42,7 @@ import numpy as np
 
 from repro.core import expert_server
 from repro.core.overlap import split_batch_decode
+from repro.models import kv_cache as kvc
 from repro.models.transformer import Model, ParallelCtx
 
 
@@ -39,9 +51,11 @@ class Executor:
 
     def __init__(self, model: Model, params, pool, *, max_batch: int,
                  max_seq: int, gemm_impl: str = "xla_ragged",
-                 decode_mode: str = "lockstep"):
+                 decode_mode: str = "lockstep", kv_mode: str = "dense",
+                 kv_block_size: int = 16, kv_num_blocks: int = 0):
         assert decode_mode in ("lockstep", "pipelined", "serialized"), \
             decode_mode
+        assert kv_mode in ("dense", "paged"), kv_mode
         if decode_mode != "lockstep":
             if model.cache_batch_axis is None:
                 raise ValueError(
@@ -51,6 +65,20 @@ class Executor:
                 raise ValueError(
                     f"decode_mode={decode_mode!r} needs an even max_batch "
                     f"(got {max_batch}) to form two microbatches")
+            if kv_mode == "paged":
+                raise ValueError(
+                    "kv_mode='paged' shares one block pool across the "
+                    "batch — microbatch-split decode modes need the dense "
+                    "per-slot cache (use decode_mode='lockstep')")
+        if kv_mode == "paged":
+            if model.init_paged_cache is None or model.prefill_chunk is None:
+                raise ValueError(
+                    "kv_mode='paged' needs a model family with paged-cache "
+                    "and chunked-prefill support (uniform decoder family)")
+            if max_seq % kv_block_size:
+                raise ValueError(
+                    f"max_seq={max_seq} must be a multiple of "
+                    f"kv_block_size={kv_block_size}")
         self.model = model
         self.params = params
         self.pool = pool
@@ -58,7 +86,14 @@ class Executor:
         self.max_seq = max_seq
         self.gemm_impl = gemm_impl
         self.decode_mode = decode_mode
-        self.cache = model.init_cache(max_batch, max_seq)
+        self.kv_mode = kv_mode
+        self.kv_block_size = kv_block_size
+        self.kv_num_blocks = kv_num_blocks
+        if kv_mode == "paged":
+            self.cache = model.init_paged_cache(
+                kv_num_blocks, kv_block_size, max_batch, max_seq)
+        else:
+            self.cache = model.init_cache(max_batch, max_seq)
         self._staging: Dict[int, object] = {}     # slot -> batch-1 cache
         self._rt0 = pool.runtime(gemm_impl) if pool else None
         self._build_jits()
@@ -117,6 +152,30 @@ class Executor:
                                            ctx_of(rt_arrays))
             self._jit_chunk = jax.jit(chunk_fn)
 
+        if self.kv_mode == "paged":
+            # block tables / lengths enter as data each call — host-side
+            # admission, sharing and preemption never recompile
+            def paged_decode_fn(params, tokens, cache, tables, lengths,
+                                rt_arrays):
+                cache = _with_tables(cache, tables, lengths)
+                logits, cache, st = decode_step(params, tokens, cache,
+                                                rt_arrays)
+                return logits, cache, st.expert_load
+
+            def paged_chunk_fn(params, tokens, cache, row, start, rt_arrays):
+                view = _with_tables(cache, row[None],
+                                    jnp.broadcast_to(start, (1,)))
+                return model.prefill_chunk(params, tokens, view, start,
+                                           ctx_of(rt_arrays))
+
+            def copy_fn(cache, src, dst):
+                return {k: kvc.copy_blocks(st, src, dst, stacked=True)
+                        for k, st in cache.items()}
+
+            self._jit_paged_decode = jax.jit(paged_decode_fn)
+            self._jit_paged_chunk = jax.jit(paged_chunk_fn)
+            self._jit_copy = jax.jit(copy_fn)
+
     def _rt_arrays(self):
         if self.pool is None:
             return ()
@@ -162,6 +221,40 @@ class Executor:
             self.params, jnp.asarray(tokens), self.cache, self._rt_arrays())
         return logits, expert_load
 
+    # -------------------------------------------------------------- paged
+    def prefill_chunk_paged(self, chunk: np.ndarray, start: int,
+                            table_row: np.ndarray) -> jax.Array:
+        """One (chunked or whole-suffix) prefill step through the block
+        table.  The pool blocks are the real storage — no staging cache —
+        so a prefix-cache hit simply starts ``start`` past the cached
+        prefix and the chunk attends over blocks an earlier request wrote.
+        """
+        tokens = jnp.asarray(chunk, jnp.int32)[None]
+        logits, view = self._jit_paged_chunk(
+            self.params, tokens, self.cache,
+            jnp.asarray(table_row, jnp.int32),
+            jnp.asarray(start, jnp.int32), self._rt_arrays())
+        self.cache = _adopt_pools(self.cache, view)
+        return logits
+
+    def decode_paged(self, tokens: np.ndarray, tables: np.ndarray,
+                     lengths: np.ndarray) -> Tuple[jax.Array, np.ndarray]:
+        """One decode step with host-authoritative block tables/lengths."""
+        logits, cache, expert_load = self._jit_paged_decode(
+            self.params, jnp.asarray(tokens), self.cache,
+            jnp.asarray(tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
+            self._rt_arrays())
+        self.cache = cache
+        return logits, expert_load
+
+    def copy_blocks(self, pairs) -> None:
+        """Apply copy-on-write forks: pool blocks src -> dst, every layer."""
+        if not pairs:
+            return
+        src = jnp.asarray([s for s, _ in pairs], jnp.int32)
+        dst = jnp.asarray([d for _, d in pairs], jnp.int32)
+        self.cache = self._jit_copy(self.cache, src, dst)
+
     # ------------------------------------------------------------- elastic
     def resize(self, pool) -> None:
         """Adopt a resized expert-server pool: re-shard the expert weights
@@ -180,6 +273,26 @@ class Executor:
 
 
 # ------------------------------------------------------------------ helpers
+
+def _with_tables(cache, tables, lengths):
+    """Rebind block tables / lengths into every stacked PagedKVCache leaf
+    (broadcast over the leading layer dim the layer scan expects)."""
+    def one(stack):
+        n = stack.k.shape[0]
+        return dataclasses.replace(
+            stack,
+            block_tables=jnp.broadcast_to(tables[None],
+                                          (n,) + tables.shape),
+            length=jnp.broadcast_to(lengths[None], (n,) + lengths.shape))
+    return {k: one(v) for k, v in cache.items()}
+
+
+def _adopt_pools(cache, view):
+    """Take the (shared) pool arrays back from a batch-1 prefill view;
+    tables/lengths stay host-authoritative."""
+    return {k: dataclasses.replace(cache[k], k=view[k].k, v=view[k].v)
+            for k in cache}
+
 
 def _map_server_weights(params, fn):
     """Apply ``fn`` to every MoE layer's per-server weight dict in a params

@@ -23,11 +23,34 @@ class ServingMetrics:
     events: List[Dict] = field(default_factory=list)
     # per-interval decode throughput (for the fault-tolerance timeline)
     timeline: List[Dict] = field(default_factory=list)
+    # --- paged-KV counters (zero when the engine runs the dense cache) ---
+    preemptions: int = 0               # slots evicted to recompute queue
+    prefix_hit_blocks: int = 0         # cached blocks adopted at admission
+    prefix_lookup_blocks: int = 0      # block hashes probed at admission
+    kv_evictions: int = 0              # cached blocks reclaimed by the pool
+    kv_cow_forks: int = 0              # copy-on-write block forks
+    kv_peak_block_util: float = 0.0    # max live-block share over the run
 
     @property
     def decode_throughput(self) -> float:
         """Output tokens per second."""
         return self.total_output_tokens / max(self.wall_time, 1e-9)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Cached share of the prompt blocks probed at admission."""
+        return self.prefix_hit_blocks / max(self.prefix_lookup_blocks, 1)
+
+    def observe_kv(self, pool, preemptions: int) -> None:
+        """Snapshot the block pool after an engine step (idempotent —
+        counters are absolute, not deltas)."""
+        self.preemptions = preemptions
+        self.prefix_hit_blocks = pool.matched_blocks
+        self.prefix_lookup_blocks = pool.queried_blocks
+        self.kv_evictions = pool.evictions
+        self.kv_cow_forks = pool.cow_forks
+        self.kv_peak_block_util = max(self.kv_peak_block_util,
+                                      pool.utilization())
 
     def itl_stats(self) -> Dict[str, float]:
         return _latency_stats(self.itls)
@@ -77,12 +100,15 @@ class ServingMetrics:
             "ttfts": list(self.ttfts),
             "events": list(self.events),
             "timeline": list(self.timeline),
+            "kv": [self.preemptions, self.prefix_hit_blocks,
+                   self.prefix_lookup_blocks, self.kv_evictions,
+                   self.kv_cow_forks, self.kv_peak_block_util],
         })
         blob = json.dumps(payload, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()
 
     def summary(self) -> Dict:
-        return {
+        out = {
             "requests": self.total_requests,
             "completed": self.completed,
             "output_tokens": self.total_output_tokens,
@@ -92,6 +118,16 @@ class ServingMetrics:
             "ttft": {k: round(v * 1e3, 3)
                      for k, v in self.ttft_stats().items()},
         }
+        if self.prefix_lookup_blocks or self.kv_peak_block_util:
+            out["kv"] = {
+                "peak_block_util": round(self.kv_peak_block_util, 4),
+                "prefix_hit_rate": round(self.prefix_hit_rate, 4),
+                "prefix_hit_blocks": self.prefix_hit_blocks,
+                "preemptions": self.preemptions,
+                "evictions": self.kv_evictions,
+                "cow_forks": self.kv_cow_forks,
+            }
+        return out
 
 
 def _latency_stats(xs: List[float]) -> Dict[str, float]:

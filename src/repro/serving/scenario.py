@@ -120,6 +120,7 @@ class Scenario:
         self._base_rate: RateFn = constant_rate(0.0)
         self._rate_overrides: List[Tuple[float, float]] = []  # set_rate pts
         self._autoscaler = None
+        self._shared_prefix: Optional[Tuple[int, int, int]] = None
 
     # ------------------------------------------------------------- traffic
     def poisson(self, rate: float) -> "Scenario":
@@ -178,15 +179,40 @@ class Scenario:
         self._autoscaler = autoscaler
         return self
 
+    def shared_prefix(self, n_prefixes: int, prefix_len: int,
+                      suffix_len: int) -> "Scenario":
+        """Multi-tenant system-prompt traffic: request ``i`` is one of
+        ``n_prefixes`` shared prefixes (drawn once from the scenario seed)
+        followed by a unique suffix — the workload where paged KV prefix
+        caching pays (``prompt_len`` is ignored; prompts become
+        ``prefix_len + suffix_len`` tokens).  Align ``prefix_len`` to the
+        engine's ``kv_block_size`` for full cache hits."""
+        self._shared_prefix = (int(n_prefixes), int(prefix_len),
+                               int(suffix_len))
+        return self
+
     # ------------------------------------------------------------ sampling
     def build_arrivals(self) -> List[Request]:
         """Materialize the request trace — deterministic in ``seed``."""
         rng = np.random.default_rng(self.seed)
         times = sample_arrival_times(self.rate_at, self.horizon, rng)
+        prefixes = None
+        if self._shared_prefix is not None:
+            n_pre, pre_len, _ = self._shared_prefix
+            prefixes = [rng.integers(0, self.vocab,
+                                     size=pre_len).astype(np.int32)
+                        for _ in range(n_pre)]
         reqs = []
         for i, t in enumerate(times):
-            prompt = rng.integers(0, self.vocab,
-                                  size=self.prompt_len).astype(np.int32)
+            if prefixes is not None:
+                n_pre, _, suf_len = self._shared_prefix
+                prompt = np.concatenate([
+                    prefixes[i % n_pre],
+                    rng.integers(0, self.vocab,
+                                 size=suf_len).astype(np.int32)])
+            else:
+                prompt = rng.integers(0, self.vocab,
+                                      size=self.prompt_len).astype(np.int32)
             reqs.append(Request(i, prompt,
                                 SamplingParams(max_new_tokens=self.max_new),
                                 arrival_time=float(t)))

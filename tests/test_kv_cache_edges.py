@@ -1,0 +1,132 @@
+"""Edge cases for the model-layer KV caches (dense and paged): boundary
+writes, capacity behaviour, and dense/paged view agreement."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import kv_cache as kvc
+
+KV, HD = 2, 4
+
+
+def _kv(rng, b, s):
+    return (jnp.asarray(rng.normal(size=(b, s, KV, HD)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, s, KV, HD)), jnp.float32))
+
+
+# ------------------------------------------------------------- dense edges
+
+def test_write_chunk_ending_exactly_at_max_seq(rng):
+    max_seq = 16
+    cache = kvc.init_kv_cache(2, max_seq, KV, HD, jnp.float32)
+    k1, v1 = _kv(rng, 2, 12)
+    cache = kvc.write_chunk(cache, k1, v1, jnp.asarray(0, jnp.int32))
+    k2, v2 = _kv(rng, 2, 4)
+    cache = kvc.write_chunk(cache, k2, v2, jnp.asarray(12, jnp.int32))
+    assert int(cache.length[0]) == max_seq
+    assert bool(kvc.valid_mask(cache).all())
+    np.testing.assert_array_equal(np.asarray(cache.k[:, 12:]),
+                                  np.asarray(k2))
+    np.testing.assert_array_equal(np.asarray(cache.k[:, :12]),
+                                  np.asarray(k1))
+
+
+def test_append_decode_on_linear_slot_at_capacity(rng):
+    """A linear cache at capacity: dynamic_update_slice clamps the write to
+    the last slot (no error, no growth) and the mask stays all-valid —
+    the engine's done-condition retires requests before this point, and
+    this pins that an off-by-one cannot corrupt earlier slots."""
+    slots = 8
+    cache = kvc.init_kv_cache(1, slots, KV, HD, jnp.float32)
+    k, v = _kv(rng, 1, slots)
+    cache = kvc.write_prefill(cache, k, v)
+    assert int(cache.length[0]) == slots
+    extra_k, extra_v = _kv(rng, 1, 1)
+    full = kvc.append_decode(cache, extra_k, extra_v)
+    assert int(full.length[0]) == slots + 1
+    assert full.k.shape == cache.k.shape
+    assert bool(kvc.valid_mask(full).all())
+    # the clamped write may only touch the final slot
+    np.testing.assert_array_equal(np.asarray(full.k[:, :-1]),
+                                  np.asarray(cache.k[:, :-1]))
+    np.testing.assert_array_equal(np.asarray(full.k[:, -1]),
+                                  np.asarray(extra_k[:, 0]))
+
+
+def test_append_decode_on_ring_slot_at_capacity_wraps(rng):
+    window = 4
+    cache = kvc.init_kv_cache(1, 100, KV, HD, jnp.float32, window=window)
+    ks, _ = _kv(rng, 1, 6)
+    for i in range(6):
+        cache = kvc.append_decode(cache, ks[:, i:i + 1], ks[:, i:i + 1])
+    assert int(cache.length[0]) == 6
+    assert bool(kvc.valid_mask(cache).all())          # ring full
+    # slot layout wraps: positions 4,5 overwrote slots 0,1
+    np.testing.assert_array_equal(np.asarray(cache.k[:, 0]),
+                                  np.asarray(ks[:, 4]))
+    np.testing.assert_array_equal(np.asarray(cache.k[:, 1]),
+                                  np.asarray(ks[:, 5]))
+    np.testing.assert_array_equal(np.asarray(cache.k[:, 2]),
+                                  np.asarray(ks[:, 2]))
+
+
+# ----------------------------------------------------- dense/paged agreement
+
+@pytest.mark.parametrize("chunks,appends", [
+    ((5, 6), 3),       # unaligned chunk boundary crossing a block edge
+    ((4, 4, 4), 4),    # block-aligned chunks, appends into a fresh block
+    ((15,), 1),        # chunk to one-below-capacity, append the last slot
+])
+def test_paged_view_and_valid_mask_agree_with_dense(rng, chunks, appends):
+    """The same write sequence through the dense cache and through the
+    block pool yields identical per-sequence views and identical masks —
+    the invariant behind dense/paged token identity."""
+    bs, max_seq, B = 4, 16, 3
+    mb = max_seq // bs
+    dense = kvc.init_kv_cache(B, max_seq, KV, HD, jnp.float32)
+    paged = kvc.init_paged_kv_cache(1 + B * mb, bs, B, mb, KV, HD,
+                                    jnp.float32)
+    # each row gets its own private blocks, deliberately shuffled so the
+    # block table (not pool layout) defines position order
+    perm = np.random.default_rng(1).permutation(np.arange(1, 1 + B * mb))
+    tables = jnp.asarray(perm.reshape(B, mb), jnp.int32)
+    paged = kvc.PagedKVCache(k=paged.k, v=paged.v, block_tables=tables,
+                             length=paged.length, block_size=bs)
+    start = 0
+    for c in chunks:
+        k, v = _kv(rng, B, c)
+        dense = kvc.write_chunk(dense, k, v, jnp.asarray(start, jnp.int32))
+        paged = kvc.paged_write_chunk(paged, k, v,
+                                      jnp.asarray(start, jnp.int32))
+        start += c
+    for _ in range(appends):
+        k, v = _kv(rng, B, 1)
+        dense = kvc.append_decode(dense, k, v)
+        paged = kvc.paged_append_decode(paged, k, v)
+    kview, vview = kvc.gather_blocks(paged)
+    assert kview.shape == dense.k.shape
+    np.testing.assert_array_equal(np.asarray(kvc.valid_mask(dense)),
+                                  np.asarray(kvc.paged_valid_mask(paged)))
+    np.testing.assert_array_equal(np.asarray(dense.length),
+                                  np.asarray(paged.length))
+    mask = np.asarray(kvc.valid_mask(dense))[..., None, None]
+    np.testing.assert_array_equal(np.asarray(kview) * mask,
+                                  np.asarray(dense.k) * mask)
+    np.testing.assert_array_equal(np.asarray(vview) * mask,
+                                  np.asarray(dense.v) * mask)
+
+
+def test_paged_copy_blocks(rng):
+    bs = 4
+    cache = kvc.init_paged_kv_cache(6, bs, 1, 2, KV, HD, jnp.float32)
+    k, v = _kv(rng, 1, bs)
+    cache = kvc.PagedKVCache(
+        k=cache.k, v=cache.v,
+        block_tables=jnp.asarray([[2, 0]], jnp.int32),
+        length=cache.length, block_size=bs)
+    cache = kvc.paged_write_chunk(cache, k, v, jnp.asarray(0, jnp.int32))
+    out = kvc.copy_blocks(cache, jnp.asarray([2], jnp.int32),
+                          jnp.asarray([5], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out.k[5]), np.asarray(out.k[2]))
+    np.testing.assert_array_equal(np.asarray(out.v[5]), np.asarray(out.v[2]))

@@ -1,0 +1,296 @@
+"""Unit tests for the KV block pool, the memory-aware scheduler, and the
+autoscaler's kv-pressure signal — pure host logic, no jax engine runs."""
+
+import numpy as np
+import pytest
+
+from repro.serving import Autoscaler, AutoscalerConfig, BlockPool, \
+    block_hashes
+from repro.serving.kv_pool import SCRATCH_BLOCK
+from repro.serving.request import Request, SamplingParams
+from repro.serving.scheduler import (DecodeBatch, PrefillChunk, Scheduler,
+                                     SchedulerConfig)
+
+
+# ------------------------------------------------------------- block hashes
+
+def test_block_hashes_chain_and_prefix_property():
+    a = np.arange(24, dtype=np.int32)
+    b = np.concatenate([np.arange(16, dtype=np.int32),
+                        np.array([99, 98, 97, 96, 95, 94, 93, 92], np.int32)])
+    ha, hb = block_hashes(a, 8), block_hashes(b, 8)
+    assert len(ha) == len(hb) == 3
+    assert ha[:2] == hb[:2]            # shared 16-token prefix
+    assert ha[2] != hb[2]              # divergent third block
+    # partial tail blocks are never hashed
+    assert len(block_hashes(a[:23], 8)) == 2
+    # each hash commits to the whole prefix, not just its own block
+    c = np.concatenate([np.array([7] * 8, np.int32), a[8:16]])
+    assert block_hashes(c, 8)[1] != ha[1]
+
+
+# --------------------------------------------------------------- block pool
+
+def test_pool_allocate_free_refcount():
+    p = BlockPool(6, 8)                # 5 usable + scratch
+    assert p.usable_blocks == 5 and p.available() == 5
+    got = p.allocate(3)
+    assert got is not None and len(got) == 3
+    assert SCRATCH_BLOCK not in got
+    assert p.available() == 2
+    assert p.allocate(3) is None       # over-ask: nothing allocated
+    assert p.available() == 2
+    p.incref(got[0])
+    p.decref(got[0])
+    assert p.available() == 2          # still referenced once
+    for bid in got:
+        p.decref(bid)
+    assert p.available() == 5
+    assert p.free_fraction() == 1.0
+
+
+def test_pool_prefix_cache_match_register_evict():
+    p = BlockPool(4, 8)                # 3 usable
+    hs = block_hashes(np.arange(24, dtype=np.int32), 8)
+    got = p.allocate(3)
+    for bid, h in zip(got, hs):
+        p.register(bid, h)
+    # release all -> cached-evictable, still matchable
+    for bid in got:
+        p.decref(bid)
+    assert p.available() == 3
+    m = p.match_prefix(hs)
+    assert m == got                    # resurrection in order
+    assert p.matched_blocks == 3 and p.queried_blocks == 3
+    for bid in m:
+        p.decref(bid)
+    # allocation pressure evicts oldest-released first and unregisters it
+    fresh = p.allocate(1)
+    assert fresh == [got[0]]
+    assert p.evictions == 1
+    m2 = p.match_prefix(hs)
+    assert m2 == []                    # chain broken at evicted block 0
+    assert p.allocate(3) is None       # fresh[0] still live
+
+
+def test_pool_match_stops_at_first_miss():
+    p = BlockPool(8, 8)
+    hs = block_hashes(np.arange(32, dtype=np.int32), 8)
+    got = p.allocate(4)
+    p.register(got[0], hs[0])
+    p.register(got[2], hs[2])          # hole at hs[1]
+    for bid in got:
+        p.decref(bid)
+    assert p.match_prefix(hs) == [got[0]]
+    p.decref(got[0])
+
+
+def test_pool_fork_cow():
+    p = BlockPool(4, 8)
+    h = block_hashes(np.arange(8, dtype=np.int32), 8)[0]
+    (src,) = p.allocate(1)
+    p.register(src, h)
+    dst = p.fork(src)
+    assert dst is not None and dst != src
+    assert p.cow_forks == 1
+    # the caller's reference on src is KEPT until the data copy lands;
+    # src stays registered and matchable, dst is private
+    assert p.match_prefix([h]) == [src]
+    p.decref(src)                      # the match's ref
+    p.decref(src)                      # copy applied: forker's ref
+    p.decref(dst)
+    assert p.available() == p.usable_blocks
+
+
+def test_pool_fork_source_safe_from_eviction_until_copy():
+    """The COW source must survive allocation pressure while the data copy
+    is pending: releasing it at fork time would let a decode-step
+    allocation evict and overwrite it, corrupting the adopted prefix."""
+    p = BlockPool(3, 8)                # 2 usable
+    h = block_hashes(np.arange(8, dtype=np.int32), 8)[0]
+    (src,) = p.allocate(1)
+    p.register(src, h)
+    p.decref(src)                      # cached-evictable
+    assert p.match_prefix([h]) == [src]
+    dst = p.fork(src)                  # takes the last free block
+    assert dst is not None
+    assert p.allocate(1) is None       # src is pinned while copy pending
+    p.decref(src)                      # copy applied -> evictable again
+    assert p.allocate(1) == [src]
+    assert p.evictions == 1
+
+
+def test_pool_disabled_prefix_cache():
+    p = BlockPool(4, 8, enable_prefix_cache=False)
+    h = block_hashes(np.arange(8, dtype=np.int32), 8)[0]
+    (bid,) = p.allocate(1)
+    p.register(bid, h)
+    p.decref(bid)
+    assert p.match_prefix([h]) == []
+    assert p.available() == 3          # went straight to the free list
+
+
+# ------------------------------------------------- memory-aware scheduler
+
+def _req(i, n=16, max_new=4, arrival=0.0):
+    return Request(i, np.arange(i * 100, i * 100 + n, dtype=np.int32),
+                   SamplingParams(max_new_tokens=max_new),
+                   arrival_time=arrival)
+
+
+def _sched(max_batch=2, prefill_chunk=0, num_blocks=9, block_size=8,
+           max_seq=32, **pool_kw):
+    pool = BlockPool(num_blocks, block_size, **pool_kw)
+    s = Scheduler(SchedulerConfig(max_batch=max_batch,
+                                  prefill_chunk=prefill_chunk,
+                                  max_seq=max_seq), kv_pool=pool)
+    return s, pool
+
+
+def test_admission_gates_on_free_blocks():
+    # 4 usable blocks, requests need 2 each (12 tokens, and the next decode
+    # write at position 12 stays inside block 1) -> third admission waits
+    s, pool = _sched(max_batch=3, num_blocks=5, block_size=8, max_seq=32)
+    for i in range(3):
+        s.submit(_req(i, n=12))
+    p = s.next_plan()
+    assert isinstance(p, PrefillChunk) and p.slot == 0
+    s.prefill_advanced(0, p.length)
+    p = s.next_plan()
+    assert isinstance(p, PrefillChunk) and p.slot == 1
+    s.prefill_advanced(1, p.length)
+    # head-of-line request 2 cannot get blocks: decode runs instead
+    plan = s.next_plan()
+    assert isinstance(plan, DecodeBatch) and plan.slots == (0, 1)
+    assert s.slots[2] is None and len(s.queue) == 1
+    assert s.preemptions == 0
+    assert s.kv_free_fraction() == 0.0
+    # completion frees blocks; request 2 admits
+    s.release(0)
+    p = s.next_plan()
+    assert isinstance(p, PrefillChunk) and p.request.request_id == 2
+
+
+def test_prefix_hit_skips_cached_prefix_and_cow_on_full_hit():
+    s, pool = _sched(max_batch=2, num_blocks=9, block_size=8, max_seq=32)
+    a = Request(0, np.arange(16, dtype=np.int32), SamplingParams())
+    s.submit(a)
+    p = s.next_plan()
+    assert p.start == 0 and p.length == 16 and not p.copies
+    s.prefill_advanced(0, 16)          # registers both full blocks
+    s.release(0)                       # blocks go cached-evictable
+    # identical prompt: full hit -> COW fork of the last block, 1-token plan
+    b = Request(1, np.arange(16, dtype=np.int32), SamplingParams())
+    s.submit(b)
+    p = s.next_plan()
+    assert isinstance(p, PrefillChunk)
+    assert p.start == 15 and p.length == 1
+    assert len(p.copies) == 1 and pool.cow_forks == 1
+    src, dst = p.copies[0]
+    assert s.block_tables[p.slot][1] == dst != src
+    assert list(p.tokens) == [15]      # only the recomputed last token
+    # partial hit: shared first block only
+    s.prefill_advanced(p.slot, 1)
+    c = Request(2, np.concatenate([np.arange(8, dtype=np.int32),
+                                   np.full(8, 7, np.int32)]),
+                SamplingParams())
+    s.submit(c)
+    p = s.next_plan()
+    assert p.start == 8 and p.length == 8 and not p.copies
+
+
+def test_chunk_planning_shrinks_to_pool_then_preempts():
+    """Chunked-prefill planning allocates per chunk: a chunk shrinks to
+    the blocks the pool can supply, and when not even one new token can
+    be covered the lowest-priority slot is preempted."""
+    s, pool = _sched(max_batch=2, prefill_chunk=16, num_blocks=6,
+                     block_size=8, max_seq=40)
+    s.submit(_req(0, n=32, arrival=0.0))
+    s.submit(_req(1, n=16, arrival=1.0))
+    p = s.next_plan()                  # both admit: 2 + 2 blocks, 1 free
+    assert (p.slot, p.start, p.length) == (0, 0, 16)
+    s.prefill_advanced(0, 16)
+    p = s.next_plan()                  # chunk [16, 32) wants 2 blocks,
+    assert (p.slot, p.start, p.length) == (0, 16, 8)   # shrinks to 1
+    s.prefill_advanced(0, 8)
+    p = s.next_plan()                  # pool dry: preempt the younger slot
+    assert (p.slot, p.start, p.length) == (0, 24, 8)
+    assert s.preemptions == 1 and s.slots[1] is None
+    assert s.queue[0].request_id == 1
+    s.prefill_advanced(0, 8)
+    assert 0 in s.decode_ready()
+
+
+def test_preemption_keeps_oldest_and_requeues_victim():
+    # two live requests, pool exhausted: the younger one is preempted when
+    # the older needs a decode block
+    s, pool = _sched(max_batch=2, num_blocks=5, block_size=8, max_seq=32)
+    old = _req(0, n=16, arrival=0.0)
+    young = _req(1, n=16, arrival=1.0)
+    for r in (old, young):
+        s.submit(r)
+    for _ in range(2):
+        p = s.next_plan()
+        s.prefill_advanced(p.slot, p.length)
+    # both decode-ready, 0 free blocks; old's next token needs block idx 2
+    old.output_tokens.append(5)        # cache_length -> 16 (block boundary)
+    young.output_tokens.append(6)
+    plan = s.next_plan()
+    assert isinstance(plan, DecodeBatch)
+    assert plan.slots == (0,)          # young was evicted from the batch
+    assert s.preemptions == 1
+    assert s.queue[0] is young         # re-queued at the front, tokens kept
+    assert young.output_tokens == [6]
+    assert s.block_tables[1].max() == SCRATCH_BLOCK
+
+
+def test_resumed_request_replans_as_prompt_extension():
+    s, pool = _sched(max_batch=1, num_blocks=9, block_size=8, max_seq=32)
+    r = _req(0, n=12)
+    r.output_tokens = [3, 4, 5]        # preempted after generating 3 tokens
+    s.submit(r)
+    p = s.next_plan()
+    assert isinstance(p, PrefillChunk)
+    # effective sequence = prompt (12) + outputs[:-1] (2) = 14 tokens
+    assert p.start == 0 and p.length == 14
+    assert list(p.tokens[-2:]) == [3, 4]
+    s.prefill_advanced(0, 14)
+    assert s.cache_length(0) == 14
+    assert isinstance(s.next_plan(), DecodeBatch)
+
+
+# ------------------------------------------------------- autoscaler signal
+
+def test_autoscaler_kv_pressure_signal():
+    asc = Autoscaler(AutoscalerConfig(rate_per_server=100, min_servers=1,
+                                      max_servers=8, window=0.1,
+                                      kv_pressure_threshold=0.25))
+    for t in (0.0, 0.01, 0.02):
+        asc.observe_arrival(t)
+    base = asc.desired_servers(0.05, queue_depth=0, kv_free_fraction=1.0)
+    calm = asc.desired_servers(0.05, queue_depth=0, kv_free_fraction=0.3)
+    tight = asc.desired_servers(0.05, queue_depth=0, kv_free_fraction=0.2)
+    assert calm == base                # above threshold: no extra server
+    assert tight == base + 1           # memory pressure scales up
+
+
+def test_kv_pressure_fires_before_admission_stalls():
+    """The pool signal leads the queue signal: free fraction drops below
+    the threshold while admission still succeeds (queue empty), so the
+    autoscaler reacts a step before requests start waiting."""
+    asc_cfg = AutoscalerConfig(rate_per_server=1000, min_servers=1,
+                               max_servers=8, window=0.1,
+                               kv_pressure_threshold=0.5)
+    asc = Autoscaler(asc_cfg)
+    s, pool = _sched(max_batch=4, num_blocks=9, block_size=8, max_seq=32)
+    for i in range(3):
+        s.submit(_req(i, n=16))        # 2 blocks each
+    for _ in range(3):
+        p = s.next_plan()              # all three admit (6 of 8 blocks)
+        s.prefill_advanced(p.slot, p.length)
+    assert not s.queue                 # no admission stall yet
+    assert s.kv_free_fraction() == pytest.approx(0.25)
+    n = asc.desired_servers(0.05, queue_depth=len(s.queue),
+                            kv_free_fraction=s.kv_free_fraction())
+    assert n > asc.desired_servers(0.05, queue_depth=0,
+                                   kv_free_fraction=1.0)
