@@ -24,6 +24,7 @@ JSON + CSV.  ``--smoke`` runs a single short configuration for CI.
 from __future__ import annotations
 
 import argparse
+import hashlib
 from typing import Dict, List
 
 from benchmarks.common import bench_model_cfg, csv_row, run_scenario, \
@@ -96,7 +97,24 @@ def run(horizon: float = 0.3, max_new: int = 24, n_prefixes: int = 2,
         d, p = sweep["dense"], sweep["paged_prefix"]
         sweep["ttft_speedup"] = (d["ttft"]["mean"] /
                                  max(p["ttft"]["mean"], 1e-12))
+        sweep["token_fingerprint"] = hashlib.sha256(
+            repr(sorted(baseline_tokens.items())).encode()).hexdigest()[:16]
         out["sweeps"][f"bs{bs}"] = sweep
+    # regression-gate contract (tools/check_bench.py): token identity is
+    # exact, throughput/TTFT ratios within tolerance
+    gate_exact: Dict = {"smoke": smoke}
+    gate_tol: Dict = {}
+    for sweep_name, sweep in out["sweeps"].items():
+        gate_exact[f"{sweep_name}/token_fingerprint"] = \
+            sweep["token_fingerprint"]
+        gate_tol[f"{sweep_name}/ttft_speedup"] = sweep["ttft_speedup"]
+        for name, r in sweep.items():
+            if isinstance(r, dict):
+                gate_exact[f"{sweep_name}/{name}/tokens_match_dense"] = \
+                    r["tokens_match_dense"]
+                gate_tol[f"{sweep_name}/{name}/tok_per_s"] = \
+                    r["decode_tok_per_s"]
+    out["gate"] = {"exact": gate_exact, "tolerance": gate_tol}
     save_result("paged_kv", out)
     return out
 

@@ -11,9 +11,9 @@ import traceback
 
 def main() -> None:
     fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
-    from benchmarks import (ablation, comm, fault_tolerance, latency,
-                            overlap_ablation, paged_kv, roofline, scaling,
-                            throughput)
+    from benchmarks import (ablation, comm, expert_balance, fault_tolerance,
+                            latency, overlap_ablation, paged_kv, roofline,
+                            scaling, throughput)
 
     suites = [("fig12_comm", comm.main),
               ("fig13_ablation", ablation.main),
@@ -24,7 +24,8 @@ def main() -> None:
                   ("fig9_latency", latency.main),
                   ("fig10_fault_tolerance", fault_tolerance.main),
                   ("fig11_scaling", scaling.main),
-                  ("paged_kv", paged_kv.main)] + suites
+                  ("paged_kv", paged_kv.main),
+                  ("expert_balance", expert_balance.main)] + suites
 
     print("name,us_per_call,derived")
     failures = 0

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import List
+from typing import List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -36,18 +36,31 @@ class ServerPool:
     tokens_per_client: int
     n_redundant: int = 2
     max_replicas: int = 4
+    # relative per-server capacity weights ((S,) or None = homogeneous);
+    # heterogeneous pools tilt replica placement toward the big servers
+    capacities: np.ndarray = None
     stats: load_balance.ExpertStats = None
     smap: ExpertServerMap = None
     redundant_table: np.ndarray = None
+    route_bias: np.ndarray = None
 
     def __post_init__(self):
         E = self.cfg.moe.num_experts
         self.stats = load_balance.ExpertStats(E)
-        mapping, red = load_balance.eplb_plan(
-            np.ones(E), self.num_servers, self.n_redundant,
-            self.max_replicas)
-        self.smap = ExpertServerMap(mapping, self.num_servers)
+        self.route_bias = np.zeros(E, np.float32)
+        mapping, red = self.plan(np.ones(E))
+        self.smap = self._make_smap(mapping)
         self.redundant_table = red
+
+    def _make_smap(self, mapping: np.ndarray) -> ExpertServerMap:
+        """Build the live mapping table with replica-column headroom: an
+        in-flight incremental migration registers a new replica before a
+        later chunk drops the old one, so an expert can transiently hold up
+        to (old + new) replicas — double width absorbs the worst case."""
+        E = mapping.shape[0]
+        pad = np.full((E, self.max_replicas), -1, np.int32)
+        return ExpertServerMap(np.concatenate([mapping, pad], axis=1),
+                               self.num_servers)
 
     # ------------------------------------------------------------- events
     def server_failed(self, rank: int) -> None:
@@ -59,17 +72,62 @@ class ServerPool:
     def observe_load(self, expert_load: np.ndarray) -> None:
         self.stats.update(expert_load)
 
-    def rebalance(self) -> None:
-        """Re-plan replication from traffic EMA (paper §4.5 / EPLB)."""
-        load = self.stats.ema if self.stats.ema is not None else None
+    def set_route_bias(self, bias: np.ndarray) -> None:
+        """Install a router-logit offset (scenario traffic shaping)."""
+        bias = np.asarray(bias, np.float32)
+        assert bias.shape == self.route_bias.shape, bias.shape
+        self.route_bias = bias
+
+    # ---------------------------------------------------------- balancing
+    def plan(self, load: Optional[np.ndarray] = None
+             ) -> Tuple[np.ndarray, np.ndarray]:
+        """EPLB plan for this pool from ``load`` (default: the traffic EMA,
+        uniform when nothing has been observed)."""
         if load is None:
-            return
-        mapping, red = load_balance.eplb_plan(
-            load, self.num_servers, self.n_redundant, self.max_replicas)
+            load = (self.stats.ema if self.stats.ema is not None
+                    else np.ones(self.cfg.moe.num_experts))
+        return load_balance.eplb_plan(
+            load, self.num_servers, self.n_redundant, self.max_replicas,
+            capacities=self.capacities)
+
+    @property
+    def plan_digest(self) -> str:
+        """Digest of the live placement's replica sets (order-free)."""
+        return load_balance.plan_digest(self.smap.table, self.num_servers)
+
+    def current_imbalance(self) -> float:
+        """max/mean per-alive-server load of the traffic EMA under the live
+        placement — the factor the slowest server stretches a decode step."""
+        if self.stats.ema is None:
+            return 1.0
+        return load_balance.imbalance(
+            self.stats.ema, self.smap.table, self.num_servers,
+            alive=self.smap.alive, capacities=self.capacities)
+
+    def apply_plan(self, mapping: np.ndarray, red: np.ndarray) -> None:
+        """Adopt a placement wholesale, preserving liveness (the one-shot
+        path; the rebalance controller instead converges incrementally via
+        drop_replica/register_replica + per-chunk weight migration)."""
         alive = self.smap.alive.copy()
-        self.smap = ExpertServerMap(mapping, self.num_servers)
+        self.smap = self._make_smap(mapping)
         self.smap.alive = alive
         self.redundant_table = red
+
+    def rebalance(self) -> bool:
+        """Re-plan replication from traffic EMA (paper §4.5 / EPLB).
+
+        Skips the runtime rebuild when the new plan is placement-identical
+        to the live table (same replica sets — column order is routing-
+        invisible); returns whether the placement changed.
+        """
+        if self.stats.ema is None:
+            return False
+        mapping, red = self.plan()
+        if load_balance.plan_digest(mapping,
+                                    self.num_servers) == self.plan_digest:
+            return False
+        self.apply_plan(mapping, red)
+        return True
 
     # ------------------------------------------------------------- elastic
     def feasible_counts(self) -> List[int]:
@@ -94,11 +152,15 @@ class ServerPool:
         if n == self.num_servers:
             return
         load = self.stats.ema if self.stats.ema is not None else np.ones(E)
-        mapping, red = load_balance.eplb_plan(
-            load, n, self.n_redundant, self.max_replicas)
         old_alive = self.smap.alive
         self.num_servers = n
-        self.smap = ExpertServerMap(mapping, n)
+        if self.capacities is not None:     # keep surviving ranks' weights
+            caps = np.ones(n, np.float64)
+            k = min(len(self.capacities), n)
+            caps[:k] = np.asarray(self.capacities, np.float64)[:k]
+            self.capacities = caps
+        mapping, red = self.plan(load)
+        self.smap = self._make_smap(mapping)
         k = min(len(old_alive), n)
         self.smap.alive[:k] = old_alive[:k]
         self.redundant_table = red
@@ -118,6 +180,7 @@ class ServerPool:
             capacity=default_capacity(self.tokens_per_client, m.top_k,
                                       self.num_servers, m.capacity_factor),
             gemm_impl=gemm_impl,
+            route_bias=jnp.asarray(self.route_bias),
         )
 
 

@@ -135,6 +135,39 @@ def extract_bank(server_w: Dict, num_experts: int) -> Dict:
     return {k: un_shard(v) for k, v in server_w.items()}
 
 
+def redundant_slot(num_experts: int, num_servers: int, j: int) -> int:
+    """Local slot index of redundant column ``j`` — slots 0..E/S-1 are the
+    block-contiguous primaries (single owner of the layout knowledge in
+    :func:`_layout_ids`; the rebalance paths build their weight-copy
+    targets through this)."""
+    return num_experts // num_servers + j
+
+
+def migrate_slots(server_w: Dict, num_experts: int,
+                  updates) -> Dict:
+    """Copy expert weights into specific server slots in place — the weight
+    half of one incremental rebalance chunk (paper §4.5 live migration).
+
+    updates: ``[(server, local_slot, expert_id)]``; ``expert_id == -1``
+    zeroes the slot (replica dropped).  Sources are read straight from the
+    block-contiguous primary slots (expert ``e`` lives at server ``e//per``
+    slot ``e%per``), which never move and are disjoint from the redundant
+    targets — so a chunk is O(chunk) data movement, not a bank rebuild,
+    and chunks compose in any order.  Accepts arbitrary leading dims
+    (scan-stacked layer axis), like the other weight-path helpers.
+    """
+    def apply(w):
+        S = w.shape[-4]
+        per = num_experts // S
+        assert per * S == num_experts, (num_experts, S)
+        for s, slot, e in updates:
+            src = w[..., e // per, e % per, :, :] if e >= 0 else 0
+            w = w.at[..., s, slot, :, :].set(src)
+        return w
+
+    return {k: apply(v) for k, v in server_w.items()}
+
+
 def reshard_server_weights(server_w: Dict, num_experts: int,
                            new_servers: int,
                            redundant_table: np.ndarray) -> Dict:

@@ -10,8 +10,10 @@ core.mapping / core.expert_server.
 
 from __future__ import annotations
 
+import hashlib
+import json
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -23,6 +25,7 @@ class ExpertStats:
     num_experts: int
     decay: float = 0.9
     ema: Optional[np.ndarray] = None
+    updates: int = 0           # observations folded in (rebalance warm-up)
 
     def update(self, load: np.ndarray) -> None:
         load = np.asarray(load, np.float64)
@@ -30,6 +33,7 @@ class ExpertStats:
             self.ema = load.copy()
         else:
             self.ema = self.decay * self.ema + (1 - self.decay) * load
+        self.updates += 1
 
     def hot_experts(self, top: int) -> np.ndarray:
         assert self.ema is not None
@@ -46,7 +50,9 @@ def primary_owner(num_experts: int, num_servers: int) -> np.ndarray:
 
 
 def eplb_plan(load: np.ndarray, num_servers: int, n_redundant: int,
-              max_replicas: int = 4) -> Tuple[np.ndarray, np.ndarray]:
+              max_replicas: int = 4,
+              capacities: Optional[np.ndarray] = None
+              ) -> Tuple[np.ndarray, np.ndarray]:
     """Greedy EPLB-style replication plan.
 
     load: (E,) expected tokens per expert.  Returns
@@ -57,10 +63,20 @@ def eplb_plan(load: np.ndarray, num_servers: int, n_redundant: int,
     shards never move; hot experts gain replicas on the least-loaded
     servers.  Expected per-server load is balanced under the EAAS client
     policy of spreading tokens uniformly over alive replicas.
+
+    ``capacities`` (S,) models heterogeneous servers (paper §4.5 degree of
+    freedom 3): loads are normalized by relative capacity when picking the
+    least-loaded replica target, so a 2x server absorbs 2x the traffic
+    before it looks "full".  All sort orders are stable, so the plan is a
+    deterministic function of (load, S, n_redundant, max_replicas,
+    capacities) — identical EMAs always produce the identical plan.
     """
     load = np.asarray(load, np.float64)
     E = load.shape[0]
     S = num_servers
+    cap = (np.ones(S, np.float64) if capacities is None
+           else np.asarray(capacities, np.float64))
+    assert cap.shape == (S,) and (cap > 0).all(), cap
 
     mapping = np.full((E, max_replicas), -1, np.int32)
     mapping[:, 0] = primary_owner(E, S)
@@ -75,7 +91,7 @@ def eplb_plan(load: np.ndarray, num_servers: int, n_redundant: int,
         server_load[mapping[e, 0]] += load[e]
 
     total_slots = S * n_redundant
-    order = np.argsort(-load)                      # hottest first
+    order = np.argsort(-load, kind="stable")       # hottest first
     for _ in range(total_slots):
         # pick the expert whose replication most reduces the max load
         best_e, best_gain, best_s = -1, 0.0, -1
@@ -85,9 +101,10 @@ def eplb_plan(load: np.ndarray, num_servers: int, n_redundant: int,
                 continue
             share = load[e] / len(reps)
             new_share = load[e] / (len(reps) + 1)
-            # candidate server: least loaded with a free redundant slot
+            # candidate server: least capacity-normalized load with a free
+            # redundant slot
             cand = -1
-            for s in np.argsort(server_load):
+            for s in np.argsort(server_load / cap, kind="stable"):
                 if red_used[s] < n_redundant and s not in reps:
                     cand = int(s)
                     break
@@ -95,7 +112,7 @@ def eplb_plan(load: np.ndarray, num_servers: int, n_redundant: int,
                 continue
             gain = share - new_share - 1e-12
             # prioritize by current load pressure of the expert's servers
-            pressure = max(server_load[s] for s in reps)
+            pressure = max(server_load[s] / cap[s] for s in reps)
             score = gain * (1 + pressure)
             if score > best_gain:
                 best_e, best_gain, best_s = int(e), score, cand
@@ -115,16 +132,86 @@ def eplb_plan(load: np.ndarray, num_servers: int, n_redundant: int,
     return mapping, red_table
 
 
-def imbalance(load: np.ndarray, mapping: np.ndarray,
-              num_servers: int) -> float:
-    """max/mean per-server load under uniform replica spreading."""
+def server_loads(load: np.ndarray, mapping: np.ndarray, num_servers: int,
+                 alive: Optional[np.ndarray] = None) -> np.ndarray:
+    """(S,) expected per-server load under uniform spreading over *alive*
+    replicas — the same client policy :func:`repro.core.mapping.lookup`
+    implements with its salt."""
     load = np.asarray(load, np.float64)
-    server_load = np.zeros(num_servers, np.float64)
+    ok = (np.ones(num_servers, bool) if alive is None
+          else np.asarray(alive, bool))
+    out = np.zeros(num_servers, np.float64)
     for e in range(load.shape[0]):
-        reps = mapping[e][mapping[e] >= 0]
-        if len(reps) == 0:
+        reps = [int(s) for s in mapping[e] if s >= 0 and ok[s]]
+        if not reps:
             continue
         for s in reps:
-            server_load[s] += load[e] / len(reps)
-    mean = server_load.mean()
-    return float(server_load.max() / max(mean, 1e-12))
+            out[s] += load[e] / len(reps)
+    return out
+
+
+def imbalance(load: np.ndarray, mapping: np.ndarray, num_servers: int,
+              alive: Optional[np.ndarray] = None,
+              capacities: Optional[np.ndarray] = None) -> float:
+    """max/mean capacity-normalized per-server load over the alive servers
+    under uniform replica spreading.  1.0 = perfectly balanced; this is the
+    factor by which the slowest server stretches a lockstep expert phase."""
+    ok = (np.ones(num_servers, bool) if alive is None
+          else np.asarray(alive, bool))
+    if not ok.any():
+        return 1.0
+    eff = server_loads(load, mapping, num_servers, alive)
+    if capacities is not None:
+        eff = eff / np.asarray(capacities, np.float64)
+    eff = eff[ok]
+    mean = eff.mean()
+    return float(eff.max() / max(mean, 1e-12))
+
+
+def plan_digest(mapping: np.ndarray, num_servers: int) -> str:
+    """Short content hash of a placement's *routing-visible* shape: the
+    per-expert replica sets (order-free — replica column order only shifts
+    the salt spreading, never which servers can serve an expert) plus the
+    pool size.  A live :class:`~repro.core.mapping.ExpertServerMap` that
+    converged to a plan by incremental drop/register steps digests equal to
+    the plan built in one shot — the cheap convergence assertion the
+    rebalance controller and its tests use."""
+    rows = [sorted(int(s) for s in row if s >= 0)
+            for row in np.asarray(mapping)]
+    blob = json.dumps([int(num_servers), rows]).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def migration_updates(old_red: np.ndarray, new_red: np.ndarray
+                      ) -> Tuple[np.ndarray, List[Tuple[int, int, int, int]]]:
+    """Diff two redundant tables into minimal per-slot migrations.
+
+    Returns ``(aligned, updates)`` where ``aligned`` is ``new_red`` with
+    each server's row reordered so experts already hosted keep their slot
+    (slot order inside a server is routing-invisible — the local table is
+    derived), and ``updates`` is ``[(server, red_slot, old_eid, new_eid)]``
+    for exactly the slots whose occupant changes.  ``new_eid == -1`` means
+    the slot empties (replica dropped without replacement).  Deterministic:
+    plain in-order scans, no hashing."""
+    old_red = np.asarray(old_red, np.int32)
+    new_red = np.asarray(new_red, np.int32)
+    assert old_red.shape == new_red.shape, (old_red.shape, new_red.shape)
+    S, n = old_red.shape
+    aligned = np.full_like(old_red, -1)
+    updates: List[Tuple[int, int, int, int]] = []
+    for s in range(S):
+        remaining = [int(e) for e in new_red[s] if e >= 0]
+        row = np.full(n, -1, np.int32)
+        for j in range(n):                 # keep experts already in place
+            e = int(old_red[s, j])
+            if e >= 0 and e in remaining:
+                row[j] = e
+                remaining.remove(e)
+        free = [j for j in range(n) if row[j] < 0]
+        for j, e in zip(free, remaining):  # repurpose the rest
+            row[j] = e
+        for j in range(n):
+            if row[j] != old_red[s, j]:
+                updates.append((s, j, int(old_red[s, j]), int(row[j])))
+        aligned[s] = row
+    return aligned, updates

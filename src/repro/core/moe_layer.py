@@ -45,6 +45,9 @@ class MoERuntime(NamedTuple):
     capacity: int              # static: tokens per (client, server) slot
     dispatch_method: str = "onehot"   # "onehot" | "sort"
     gemm_impl: str = "auto"
+    # (E,) fp32 router-logit offset (traffic shaping — scenario set_skew);
+    # None = unbiased.  Data like the mapping: rewriting it never recompiles.
+    route_bias: Optional[jax.Array] = None
 
 
 class MoEStats(NamedTuple):
@@ -146,7 +149,8 @@ def eaas_moe_apply(params: Dict, x: jax.Array, cfg_moe: MoEConfig,
     S, C = runtime.num_servers, runtime.capacity
 
     # ---- client: route + resolve service instances ----------------------
-    r = router.route(params["router"], x, cfg_moe)
+    r = router.route(params["router"], x, cfg_moe,
+                     bias=runtime.route_bias)
     if token_salt is None:
         token_salt = jnp.arange(T, dtype=jnp.int32)[:, None] + jnp.arange(
             r.expert_ids.shape[1], dtype=jnp.int32)[None, :]

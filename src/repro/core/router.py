@@ -21,11 +21,20 @@ def init_router(key, d_model: int, num_experts: int) -> Dict:
     return {"w_router": w}
 
 
-def route(params: Dict, x: jax.Array, cfg: MoEConfig):
-    """x: (T, d) -> RouterOutput over cfg.num_experts with cfg.top_k."""
+def route(params: Dict, x: jax.Array, cfg: MoEConfig,
+          bias: jax.Array = None):
+    """x: (T, d) -> RouterOutput over cfg.num_experts with cfg.top_k.
+
+    ``bias``: optional (E,) fp32 logit offset added before scoring —
+    runtime *data*, not params.  The serving tier uses it to shape expert
+    traffic (scenario ``set_skew``: Zipf-skewed / shifting-hot-set traces);
+    zeros reproduce the unbiased router bit-exactly.
+    """
     from repro.core.types import RouterOutput
 
     logits = x.astype(jnp.float32) @ params["w_router"]     # (T, E)
+    if bias is not None:
+        logits = logits + bias.astype(jnp.float32)
     if cfg.router_score_fn == "softmax":
         probs = jax.nn.softmax(logits, axis=-1)
     elif cfg.router_score_fn == "sigmoid":

@@ -13,6 +13,9 @@ from repro.serving.executor import Executor  # noqa: F401
 from repro.serving.kv_pool import BlockPool, block_hashes  # noqa: F401
 from repro.serving.request import Request, SamplingParams  # noqa: F401
 from repro.serving.clock import Clock, VirtualClock, WallClock  # noqa: F401
-from repro.serving.scenario import Scenario, ScenarioResult  # noqa: F401
+from repro.serving.scenario import (Scenario, ScenarioResult,  # noqa: F401
+                                    zipf_bias)
 from repro.serving.scheduler import Scheduler, SchedulerConfig  # noqa: F401
 from repro.serving.autoscale import Autoscaler, AutoscalerConfig  # noqa: F401
+from repro.serving.rebalance import (RebalanceConfig,  # noqa: F401
+                                     RebalanceController)

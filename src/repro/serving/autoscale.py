@@ -87,6 +87,15 @@ class Autoscaler:
             return None
         if t < self.cfg.window:        # warm-up: the rate estimate is not
             return None                # meaningful before one full window
+        # coordinate with live rebalancing: expert-level replication acts
+        # first (cheap, no recompile) — hold server-count scaling while a
+        # migration is in flight or inside the shared placement cooldown
+        reb = getattr(engine, "rebalancer", None)
+        if reb is not None and reb.migrating:
+            return None
+        if (t - getattr(engine, "last_placement_change", float("-inf"))
+                < self.cfg.cooldown):
+            return None
         backlog = 0
         if self.cfg.prefill_tokens_per_server > 0:
             backlog = engine.scheduler.pending_prefill_tokens()

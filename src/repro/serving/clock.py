@@ -41,17 +41,23 @@ class Clock:
 
     def stop(self, kind: str, *, result=None, tokens: int = 0,
              servers: int = 1, alive_frac: float = 1.0,
-             overlap: bool = False) -> float:
+             overlap: bool = False, imbalance: float = 1.0) -> float:
         """End the bracket opened by :meth:`start`.
 
-        kind: "prefill" | "decode"; result: a jax array to block on (wall
-        clocks only); tokens: token work in the step (chunk length for
-        prefill — chunked prefill is charged per chunk, base included —
-        active slots for decode); servers: expert-server pool size (the
-        token work parallelizes over it); alive_frac: alive share of the
-        pool (EAAS failover slowdown); overlap: the step ran as two
-        pipelined microbatches (client pipelining, paper §4.2) — virtual
-        clocks charge ``max(attention, expert) + ε`` instead of the sum.
+        kind: "prefill" | "decode" | "migrate"; result: a jax array to
+        block on (wall clocks only); tokens: token work in the step (chunk
+        length for prefill — chunked prefill is charged per chunk, base
+        included — active slots for decode, expert-weight copies for
+        migrate); servers: expert-server pool size (the token work
+        parallelizes over it); alive_frac: alive share of the pool (EAAS
+        failover slowdown); overlap: the step ran as two pipelined
+        microbatches (client pipelining, paper §4.2) — virtual clocks
+        charge ``max(attention, expert) + ε`` instead of the sum;
+        imbalance: max/mean per-server expert load (≥ 1) — a lockstep
+        expert phase finishes with its hottest server, so virtual clocks
+        stretch the expert share of a decode step by this factor (the cost
+        hot-expert skew actually exacts; 1.0 = balanced, the default,
+        reproduces the unstretched model bit-exactly).
         """
         raise NotImplementedError
 
@@ -71,7 +77,7 @@ class WallClock(Clock):
 
     def stop(self, kind: str, *, result=None, tokens: int = 0,
              servers: int = 1, alive_frac: float = 1.0,
-             overlap: bool = False) -> float:
+             overlap: bool = False, imbalance: float = 1.0) -> float:
         if result is not None:
             result.block_until_ready()
         return time.perf_counter() - self._t0
@@ -101,13 +107,22 @@ class VirtualClock(Clock):
     # chunks.
     expert_share: float = 0.5
     overlap_eps: float = 1e-5
+    # live expert migration (rebalance chunks): a fixed control round-trip
+    # plus a per-expert weight-copy cost — charged between decode steps, so
+    # the chunk size trades adaptation speed against decode interference
+    migrate_base: float = 1e-3
+    migrate_per_expert: float = 2e-3
 
     def start(self) -> None:  # nothing to measure
         pass
 
     def stop(self, kind: str, *, result=None, tokens: int = 0,
              servers: int = 1, alive_frac: float = 1.0,
-             overlap: bool = False) -> float:
+             overlap: bool = False, imbalance: float = 1.0) -> float:
+        if kind == "migrate":
+            # weight movement doesn't parallelize over the pool (each copy
+            # lands on one server) and is unaffected by liveness
+            return self.migrate_base + self.migrate_per_expert * tokens
         # token work parallelizes over the expert-server pool (weak scaling);
         # the base covers attention/client work that does not.
         work = tokens / max(servers, 1)
@@ -115,10 +130,13 @@ class VirtualClock(Clock):
             dt = self.prefill_base + self.prefill_per_token * work
         else:
             var = self.decode_per_token * work
-            if overlap:
-                expert = self.expert_share * var
+            if overlap or imbalance > 1.0:
+                # the expert phase finishes with its hottest server: skew
+                # stretches the expert share by max/mean server load
+                expert = self.expert_share * var * max(imbalance, 1.0)
                 client = (1.0 - self.expert_share) * var
-                var = max(expert, client) + self.overlap_eps
+                var = (max(expert, client) + self.overlap_eps if overlap
+                       else expert + client)
             dt = self.decode_base + var
         if self.degrade_with_dead:
             dt /= max(min(alive_frac, 1.0), 1e-3)

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import expert_server, load_balance
 from repro.core.elastic import ServerPool
 from repro.core.monitor import Monitor
 from repro.models.transformer import build_model
@@ -55,6 +56,7 @@ from repro.serving.clock import Clock, WallClock
 from repro.serving.executor import Executor
 from repro.serving.kv_pool import BlockPool
 from repro.serving.metrics import ServingMetrics
+from repro.serving.rebalance import RebalanceConfig, RebalanceController
 from repro.serving.request import Request
 from repro.serving.sampling import sample, sample_batch
 from repro.serving.scheduler import (DecodeBatch, PrefillChunk, Scheduler,
@@ -100,6 +102,23 @@ class EngineConfig:
     # or preemption could not keep the engine live.
     kv_num_blocks: Optional[int] = None
     kv_prefix_cache: bool = True
+    # --- live rebalancing knobs ------------------------------------------
+    # seconds between live replan evaluations (0 = off, the seed behaviour:
+    # placement only changes through explicit rebalance()/scale_to() calls)
+    rebalance_interval: float = 0.0
+    # expert-weight copies migrated per engine step once a replan is staged
+    rebalance_chunk: int = 2
+    # relative imbalance improvement required before migrating (hysteresis)
+    rebalance_min_gain: float = 0.05
+    # post-placement-change quiet period, shared with the autoscaler
+    rebalance_cooldown: float = 0.05
+    # charge decode steps for hot-expert skew: the expert share of the
+    # virtual step cost stretches by the pool's max/mean alive-server load
+    # (a lockstep expert phase finishes with its hottest server).  Off by
+    # default — existing virtual timelines stay bit-identical.
+    charge_imbalance: bool = False
+    # relative per-server capacity weights ((num_servers,) or None)
+    server_capacities: Optional[np.ndarray] = None
 
 
 class ServingEngine:
@@ -118,7 +137,8 @@ class ServingEngine:
                 tokens_per_client=(engine_cfg.pool_tokens_per_client
                                    or engine_cfg.max_batch),
                 n_redundant=(engine_cfg.n_redundant
-                             if engine_cfg.mode == "eaas" else 0))
+                             if engine_cfg.mode == "eaas" else 0),
+                capacities=engine_cfg.server_capacities)
         self.model = build_model(
             cfg, num_servers=S if cfg.moe else 1,
             redundant_table=self.pool.redundant_table if self.pool else None)
@@ -168,6 +188,16 @@ class ServingEngine:
         self.clock = 0.0
         self.halted_until = -1
         self._last_decode_time = 0.01
+        # shared placement cooldown (rebalance commits + elastic scaling)
+        self.last_placement_change = float("-inf")
+        self.rebalancer: Optional[RebalanceController] = None
+        if (engine_cfg.rebalance_interval > 0 and self.pool is not None
+                and engine_cfg.mode == "eaas"):
+            self.rebalancer = RebalanceController(RebalanceConfig(
+                interval=engine_cfg.rebalance_interval,
+                chunk=engine_cfg.rebalance_chunk,
+                min_gain=engine_cfg.rebalance_min_gain,
+                cooldown=engine_cfg.rebalance_cooldown))
 
     # ------------------------------------------------- back-compat surface
     @property
@@ -227,10 +257,57 @@ class ServingEngine:
             self.pool.server_recovered(rank)
 
     def rebalance(self) -> None:
-        """EPLB-style replica re-planning from live traffic (paper §4.5)."""
-        if self.pool:
-            self.pool.rebalance()
-            self.metrics.events.append({"t": self.clock, "event": "rebalance"})
+        """One-shot EPLB replica re-planning from live traffic (paper
+        §4.5) — the scripted/manual path.  Placement-identical plans are
+        skipped via ``plan_digest`` (nothing rebuilt); a changed plan
+        migrates the replica weights *and* the mapping in one step (the
+        weight copies charged as one big ``migrate`` step), so weights and
+        local table never disagree.  The live ``rebalance_interval``
+        controller spreads the same work over chunked migration steps
+        interleaved with decoding instead.
+        """
+        if self.pool is None:
+            return
+        if self.rebalancer is not None:
+            self.rebalancer.abort()      # the one-shot replan supersedes it
+        pool = self.pool
+        mapping, red = pool.plan()
+        changed = (load_balance.plan_digest(mapping, pool.num_servers)
+                   != pool.plan_digest)
+        if changed:
+            aligned, updates = load_balance.migration_updates(
+                pool.redundant_table, red)
+            E = pool.cfg.moe.num_experts
+            copies = [(s, expert_server.redundant_slot(
+                           E, pool.num_servers, j), new_e)
+                      for s, j, _, new_e in updates if new_e >= 0]
+            self.clk.start()
+            if copies:
+                self.executor.migrate_slots(copies)
+            dt = self.clk.stop("migrate", tokens=len(copies),
+                               servers=pool.num_servers)
+            self.clock += dt
+            pool.apply_plan(mapping, aligned)
+            self.metrics.rebalances += 1
+            self.metrics.migrated_experts += len(copies)
+            self.metrics.migration_time += dt
+            self.last_placement_change = self.clock
+        else:
+            self.metrics.rebalance_noops += 1
+        self.metrics.events.append(
+            {"t": self.clock, "event": "rebalance", "changed": changed})
+
+    def set_skew(self, bias: np.ndarray) -> None:
+        """Install a router-logit bias (scenario ``set_skew`` traffic
+        shaping).  Pure runtime data — the next jitted step routes under
+        the new bias without recompiling."""
+        if self.pool is None:
+            return
+        self.pool.set_route_bias(bias)
+        bias = np.asarray(bias, np.float64)
+        self.metrics.events.append(
+            {"t": self.clock, "event": "set_skew",
+             "spread": round(float(bias.max() - bias.min()), 6)})
 
     def scale_to(self, n: int) -> None:
         """Elastically resize the expert-server pool to ``n`` servers.
@@ -244,8 +321,11 @@ class ServingEngine:
         if self.pool is None or n == self.pool.num_servers:
             return
         old = self.pool.num_servers
+        if self.rebalancer is not None:
+            self.rebalancer.abort()      # a resize replans placement anyway
         self.pool.scale_to(n)
         self.executor.resize(self.pool)
+        self.last_placement_change = self.clock
         self.metrics.events.append(
             {"t": self.clock, "event": "scale", "from": old, "to": n})
 
@@ -267,6 +347,10 @@ class ServingEngine:
             self._step_decode(plan)
         else:
             self.clock += self.clk.idle()
+        if self.rebalancer is not None:
+            # migration chunks interleave with decode steps — serving
+            # never pauses for a replan (paper §4.5 live adaptation)
+            self.rebalancer.step(self)
         if self.kv_pool is not None:
             self.metrics.observe_kv(self.kv_pool,
                                     self.scheduler.preemptions)
@@ -329,14 +413,25 @@ class ServingEngine:
                 self.scheduler.cache_lengths())
         else:
             logits, expert_load = self.executor.decode(tokens)
+        imbalance = 1.0
+        if self.pool is not None:
+            # fold this step's router traffic into the EMA first, so the
+            # imbalance charged (and surfaced) reflects current traffic;
+            # the gauge itself is only computed when something consumes it
+            # (cost model or controller) — it walks the mapping in Python
+            self.pool.observe_load(np.asarray(expert_load))
+            if self.ecfg.charge_imbalance or self.rebalancer is not None:
+                imbalance = self.pool.current_imbalance()
+                self.metrics.observe_balance(imbalance)
         dt = self.clk.stop("decode", result=logits, tokens=len(active),
                            servers=self._pool_size(),
                            alive_frac=self._alive_frac(),
-                           overlap=(self.ecfg.decode_mode == "pipelined"))
+                           overlap=(self.ecfg.decode_mode == "pipelined"),
+                           imbalance=(imbalance
+                                      if self.ecfg.charge_imbalance
+                                      else 1.0))
         self._last_decode_time = dt
         self.clock += dt
-        if self.pool is not None:
-            self.pool.observe_load(np.asarray(expert_load))
         next_tokens = np.asarray(sample_batch(logits, temps,
                                               sch.slot_keys, steps))
 

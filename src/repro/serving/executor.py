@@ -116,9 +116,9 @@ class Executor:
         def ctx_of(rt_arrays):
             rt = None
             if rt0 is not None:
-                mapping, alive, local = rt_arrays
+                mapping, alive, local, route_bias = rt_arrays
                 rt = rt0._replace(mapping=mapping, alive=alive,
-                                  local_table=local)
+                                  local_table=local, route_bias=route_bias)
             return ParallelCtx(moe_runtime=rt, gemm_impl=gemm_impl,
                                remat=False)
 
@@ -180,7 +180,7 @@ class Executor:
         if self.pool is None:
             return ()
         rt = self.pool.runtime(self.gemm_impl)
-        return (rt.mapping, rt.alive, rt.local_table)
+        return (rt.mapping, rt.alive, rt.local_table, rt.route_bias)
 
     # ------------------------------------------------------------ prefill
     def prefill(self, slot: int, prompt: np.ndarray) -> jax.Array:
@@ -254,6 +254,19 @@ class Executor:
         src = jnp.asarray([s for s, _ in pairs], jnp.int32)
         dst = jnp.asarray([d for _, d in pairs], jnp.int32)
         self.cache = self._jit_copy(self.cache, src, dst)
+
+    # ----------------------------------------------------------- rebalance
+    def migrate_slots(self, updates) -> None:
+        """Apply one incremental expert-weight migration chunk: copy the
+        listed experts into their new redundant slots across every MoE
+        layer (``updates: [(server, local_slot, expert_id)]``).  Weights
+        are jit *arguments*, so the swap never recompiles; the pool drops
+        the old replica from the mapping before this copy and commits the
+        new mapping/local-table only after it lands (break-before-make)."""
+        E = self.model.cfg.moe.num_experts
+        self.params = _map_server_weights(
+            self.params,
+            lambda sw: expert_server.migrate_slots(sw, E, updates))
 
     # ------------------------------------------------------------- elastic
     def resize(self, pool) -> None:

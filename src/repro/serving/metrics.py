@@ -30,6 +30,13 @@ class ServingMetrics:
     kv_evictions: int = 0              # cached blocks reclaimed by the pool
     kv_cow_forks: int = 0              # copy-on-write block forks
     kv_peak_block_util: float = 0.0    # max live-block share over the run
+    # --- expert-balance gauges (the ExpertStats EMA surfaced per step) ---
+    expert_imbalance: float = 1.0      # latest max/mean alive-server load
+    peak_expert_imbalance: float = 1.0 # worst imbalance seen over the run
+    rebalances: int = 0                # committed live placement re-plans
+    rebalance_noops: int = 0           # evaluations whose plan was identical
+    migrated_experts: int = 0          # expert-weight copies applied
+    migration_time: float = 0.0        # seconds charged to migration chunks
 
     @property
     def decode_throughput(self) -> float:
@@ -40,6 +47,13 @@ class ServingMetrics:
     def prefix_hit_rate(self) -> float:
         """Cached share of the prompt blocks probed at admission."""
         return self.prefix_hit_blocks / max(self.prefix_lookup_blocks, 1)
+
+    def observe_balance(self, imbalance: float) -> None:
+        """Record the pool's current traffic-EMA imbalance after a decode
+        step (the statistic the rebalance controller plans from)."""
+        self.expert_imbalance = imbalance
+        self.peak_expert_imbalance = max(self.peak_expert_imbalance,
+                                         imbalance)
 
     def observe_kv(self, pool, preemptions: int) -> None:
         """Snapshot the block pool after an engine step (idempotent —
@@ -103,6 +117,10 @@ class ServingMetrics:
             "kv": [self.preemptions, self.prefix_hit_blocks,
                    self.prefix_lookup_blocks, self.kv_evictions,
                    self.kv_cow_forks, self.kv_peak_block_util],
+            "balance": [self.rebalances, self.rebalance_noops,
+                        self.migrated_experts, self.migration_time,
+                        self.expert_imbalance,
+                        self.peak_expert_imbalance],
         })
         blob = json.dumps(payload, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()
@@ -118,6 +136,17 @@ class ServingMetrics:
             "ttft": {k: round(v * 1e3, 3)
                      for k, v in self.ttft_stats().items()},
         }
+        if self.rebalances or self.migrated_experts or \
+                self.peak_expert_imbalance > 1.0:
+            out["balance"] = {
+                "expert_imbalance": round(self.expert_imbalance, 4),
+                "peak_expert_imbalance": round(self.peak_expert_imbalance,
+                                               4),
+                "rebalances": self.rebalances,
+                "rebalance_noops": self.rebalance_noops,
+                "migrated_experts": self.migrated_experts,
+                "migration_time_s": round(self.migration_time, 4),
+            }
         if self.prefix_lookup_blocks or self.kv_peak_block_util:
             out["kv"] = {
                 "peak_block_util": round(self.kv_peak_block_util, 4),

@@ -1,0 +1,171 @@
+"""Live traffic-adaptive expert rebalancing (paper §4.5, Fig. 10).
+
+The paper's "dynamic fine-grained adaptation to serving traffic" claim
+rests on *live* expert replication: the serving loop observes per-step
+router traffic and migrates expert replicas while decoding continues.
+This module closes that loop:
+
+* every decode step feeds ``MoEStats.expert_load`` into the pool's
+  :class:`~repro.core.load_balance.ExpertStats` EMA (the engine's side);
+* the :class:`RebalanceController` periodically re-runs the EPLB greedy
+  planner on the EMA and diffs the plan against the live
+  :class:`~repro.core.mapping.ExpertServerMap` via
+  :func:`~repro.core.load_balance.plan_digest` — placement-identical plans
+  are recorded as no-ops and nothing is rebuilt;
+* a changed plan becomes a queue of per-slot migrations
+  (:func:`~repro.core.load_balance.migration_updates`), applied a few
+  expert-weight copies per engine step (``chunk``), interleaved with
+  decode steps so serving never pauses.  Each chunk is break-before-make:
+  the old replica is dropped from the mapping (its traffic falls back to
+  the primaries + surviving replicas — always safe), the new expert's
+  weights are copied into the slot (charged as a ``migrate`` step on the
+  engine clock — the :class:`~repro.serving.clock.VirtualClock` cost
+  model keeps ablations deterministic), and only then is the new replica
+  registered.  Traffic thus never routes to a slot whose weights don't
+  match.
+
+Coordination with the :class:`~repro.serving.autoscale.Autoscaler`
+(expert-level replication first, server-count scaling second): both share
+the engine's ``last_placement_change`` cooldown, the autoscaler holds off
+while a migration is in flight, and ``engine.scale_to`` aborts any pending
+migration (a resize re-plans placement wholesale anyway).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core import load_balance
+from repro.core.expert_server import redundant_slot
+
+
+@dataclass
+class RebalanceConfig:
+    # engine-clock seconds between plan evaluations
+    interval: float = 0.02
+    # expert-weight copies applied per engine step (migration granularity)
+    chunk: int = 2
+    # required relative imbalance improvement before migrating (hysteresis:
+    # don't chase noise in the EMA)
+    min_gain: float = 0.05
+    # seconds after any placement change (commit or scale) before the next
+    # evaluation — shared with the autoscaler
+    cooldown: float = 0.05
+    # decode steps observed before the first evaluation (EMA warm-up)
+    min_observations: int = 4
+
+
+@dataclass
+class RebalanceController:
+    """Periodic replan + incremental migration driver for one engine."""
+
+    cfg: RebalanceConfig = field(default_factory=RebalanceConfig)
+    # (server, red_slot, old_eid, new_eid) still to apply
+    _pending: List[Tuple[int, int, int, int]] = field(default_factory=list)
+    _target_digest: Optional[str] = None
+    _last_eval: float = float("-inf")
+
+    @property
+    def migrating(self) -> bool:
+        """A staged migration has chunks left to apply."""
+        return bool(self._pending)
+
+    def abort(self) -> None:
+        """Drop the rest of a staged migration (pool resize replans
+        wholesale; chunks already applied are consistent and stay)."""
+        self._pending = []
+        self._target_digest = None
+
+    # ---------------------------------------------------------------- loop
+    def step(self, engine) -> None:
+        """One control iteration, called once per engine step.  Either
+        applies the next migration chunk or (at most every ``interval``
+        seconds) re-evaluates the plan."""
+        pool = engine.pool
+        if pool is None:
+            return
+        if self._pending:
+            self._apply_chunk(engine)
+            return
+        t = engine.clock
+        if t - self._last_eval < self.cfg.interval:
+            return
+        self._last_eval = t
+        if pool.stats.updates < self.cfg.min_observations:
+            return
+        if t - engine.last_placement_change < self.cfg.cooldown:
+            return
+        self._evaluate(engine)
+
+    def _evaluate(self, engine) -> None:
+        pool = engine.pool
+        mapping, red = pool.plan()
+        digest = load_balance.plan_digest(mapping, pool.num_servers)
+        if digest == pool.plan_digest:
+            engine.metrics.rebalance_noops += 1
+            return
+        current = pool.current_imbalance()
+        planned = load_balance.imbalance(
+            pool.stats.ema, mapping, pool.num_servers,
+            alive=pool.smap.alive, capacities=pool.capacities)
+        if current - planned < self.cfg.min_gain * current:
+            engine.metrics.rebalance_noops += 1
+            return
+        aligned, updates = load_balance.migration_updates(
+            pool.redundant_table, red)
+        if not updates:
+            engine.metrics.rebalance_noops += 1
+            return
+        self._pending = updates
+        self._target_digest = digest
+        engine.metrics.events.append(
+            {"t": engine.clock, "event": "rebalance_plan",
+             "updates": len(updates),
+             "imbalance": round(current, 6),
+             "planned_imbalance": round(planned, 6)})
+
+    # ----------------------------------------------------------- migration
+    def _apply_chunk(self, engine) -> None:
+        pool = engine.pool
+        updates = self._pending[:self.cfg.chunk]
+        self._pending = self._pending[self.cfg.chunk:]
+
+        # break: stop routing to the slots being repurposed (their traffic
+        # falls back to the primaries + remaining replicas within the step)
+        for s, _, old_e, _ in updates:
+            if old_e >= 0:
+                pool.smap.drop_replica(old_e, s)
+
+        # move: copy the incoming experts' weights into the freed slots
+        E = pool.cfg.moe.num_experts
+        copies = [(s, redundant_slot(E, pool.num_servers, j), new_e)
+                  for s, j, _, new_e in updates if new_e >= 0]
+        engine.clk.start()
+        if copies:
+            engine.executor.migrate_slots(copies)
+        dt = engine.clk.stop("migrate", tokens=len(copies),
+                             servers=pool.num_servers)
+        engine.clock += dt
+        engine.metrics.migration_time += dt
+        engine.metrics.migrated_experts += len(copies)
+
+        # make: commit the placement now that the weights landed — the
+        # local table is derived from the redundant table at the next
+        # runtime() and the mapping registers the fresh replicas, so the
+        # very next step routes to them
+        for s, j, _, new_e in updates:
+            pool.redundant_table[s, j] = new_e
+            if new_e >= 0:
+                pool.smap.register_replica(new_e, s)
+        engine.metrics.events.append(
+            {"t": engine.clock, "event": "migrate", "chunk": len(updates)})
+
+        if not self._pending:
+            engine.metrics.rebalances += 1
+            engine.last_placement_change = engine.clock
+            engine.metrics.events.append(
+                {"t": engine.clock, "event": "rebalance_commit",
+                 "digest": pool.plan_digest,
+                 "converged": pool.plan_digest == self._target_digest})
+            self._target_digest = None

@@ -40,6 +40,32 @@ from repro.serving.request import Request, SamplingParams
 RateFn = Callable[[float], float]
 
 
+# ------------------------------------------------------------ traffic skew
+
+def zipf_bias(num_experts: int, alpha: float, scale: float = 2.0,
+              seed: int = 0, rotation: int = 0) -> np.ndarray:
+    """Router-logit bias tilting expert traffic toward a Zipf(``alpha``)
+    profile over a seeded expert permutation.
+
+    Rank r (0-based) of the permutation gets bias ``scale * log p_r`` with
+    ``p_r ∝ (r+1)^-alpha`` (normalized so the hottest expert sits at 0 and
+    everything else is negative).  ``scale`` sets how hard the bias
+    dominates the natural router logits: ~0.5 nudges, ≥3 concentrates
+    traffic onto the top-k hottest experts.  ``rotation`` rolls the
+    permutation — the shifting-hot-set trace rotates it every period, the
+    regime where frozen placement is always chasing stale traffic.
+    ``alpha=0`` is the uniform profile: an all-zero bias, bit-identical to
+    unbiased routing.
+    """
+    ranks = np.arange(1, num_experts + 1, dtype=np.float64) ** (-alpha)
+    p = ranks / ranks.sum()
+    perm = np.roll(np.random.default_rng(seed).permutation(num_experts),
+                   rotation)
+    bias = np.empty(num_experts, np.float64)
+    bias[perm] = scale * np.log(p)
+    return (bias - bias.max()).astype(np.float32)
+
+
 # --------------------------------------------------------------- rate shapes
 
 def constant_rate(rate: float) -> RateFn:
@@ -173,6 +199,38 @@ class Scenario:
         self.events.append(ScenarioEvent(float(t), "set_policy", policy))
         return self
 
+    # ---------------------------------------------------------- skew events
+    def set_skew(self, t: float, alpha: float, scale: float = 2.0,
+                 rotation: int = 0) -> "Scenario":
+        """From time ``t``, bias the engine's router toward a Zipf(alpha)
+        expert profile (:func:`zipf_bias` over this scenario's seed).
+        ``alpha=0`` clears the skew.  Applied at t=0 the skew is constant
+        over the run, so routing stays a pure function of request content —
+        engines with different placements (frozen vs rebalanced) still
+        produce bitwise-identical greedy token streams."""
+        self.events.append(ScenarioEvent(
+            float(t), "set_skew",
+            (float(alpha), float(scale), int(rotation))))
+        return self
+
+    def zipf_skew(self, alpha: float, scale: float = 2.0) -> "Scenario":
+        """Constant Zipf-skewed expert traffic for the whole run (the
+        hot-expert regime MegaScale-Infer targets)."""
+        return self.set_skew(0.0, alpha, scale)
+
+    def shifting_hot_set(self, alpha: float, period: float,
+                         scale: float = 2.0) -> "Scenario":
+        """Rotate the Zipf hot set every ``period`` seconds: each shift
+        re-rolls which experts are hot, so a frozen placement is always
+        provisioned for the *previous* hot set while a live rebalancer
+        chases the traffic."""
+        t, rotation = 0.0, 0
+        while t < self.horizon:
+            self.set_skew(t, alpha, scale, rotation=rotation)
+            t += float(period)
+            rotation += 1
+        return self
+
     def autoscale(self, autoscaler) -> "Scenario":
         """Attach an :class:`~repro.serving.autoscale.Autoscaler` policy loop
         (observed each step; scaling decisions become engine.scale_to)."""
@@ -261,8 +319,7 @@ class Scenario:
         return ScenarioResult(metrics=engine.metrics, requests=arrivals,
                               applied=applied, server_trace=trace)
 
-    @staticmethod
-    def _apply(ev: ScenarioEvent, engine) -> None:
+    def _apply(self, ev: ScenarioEvent, engine) -> None:
         if ev.kind == "fail":
             engine.inject_server_failure(ev.value)
         elif ev.kind == "recover":
@@ -273,5 +330,12 @@ class Scenario:
             engine.scale_to(ev.value)
         elif ev.kind == "set_policy":
             engine.set_policy(ev.value)
+        elif ev.kind == "set_skew":
+            if engine.cfg.moe is None:
+                return
+            alpha, scale, rotation = ev.value
+            engine.set_skew(zipf_bias(engine.cfg.moe.num_experts, alpha,
+                                      scale=scale, seed=self.seed,
+                                      rotation=rotation))
         else:
             raise ValueError(f"unknown scenario event {ev.kind!r}")

@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""CI benchmark-regression gate: compare a benchmark's JSON against its
+committed baseline.
+
+Contract: the benchmark JSON carries a top-level ``gate`` object::
+
+    "gate": {
+        "exact":     {"<key>": <value>, ...},   # must match bit-for-bit
+        "tolerance": {"<key>": <number>, ...}   # relative tolerance
+    }
+
+``exact`` holds token-identity fingerprints, equivalence booleans and the
+smoke flag — anything whose change means the benchmark no longer computes
+the same thing.  ``tolerance`` holds throughput-like numbers that may
+drift with the environment; they must stay within ``--tolerance`` relative
+error of the baseline (default 20%, and one-sided checks make no sense for
+a virtual clock — both directions flag, a silent speedup usually means the
+benchmark stopped measuring what it did).
+
+Every key present in the *baseline* must be present and conforming in the
+current run; extra keys in the current run are reported but pass (so a
+benchmark can grow new metrics before its baseline is refreshed).
+
+Usage::
+
+    python tools/check_bench.py \
+        --current experiments/bench/expert_balance.json \
+        --baseline experiments/baselines/expert_balance.json
+
+    # refresh a baseline after an intentional change:
+    python tools/check_bench.py --current ... --baseline ... \
+        --write-baseline
+
+Exit status: 0 = pass, 1 = regression, 2 = bad invocation / missing file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Tuple
+
+
+def load_gate(path: str) -> Tuple[Dict, Dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    gate = doc.get("gate")
+    if not isinstance(gate, dict):
+        raise ValueError(f"{path}: no 'gate' object — the benchmark does "
+                         "not participate in the regression lane")
+    return gate.get("exact", {}), gate.get("tolerance", {})
+
+
+def compare(base_exact: Dict, base_tol: Dict, cur_exact: Dict,
+            cur_tol: Dict, tolerance: float) -> Tuple[List[str], List[str]]:
+    """Returns (failures, notes)."""
+    failures: List[str] = []
+    notes: List[str] = []
+    for key, want in base_exact.items():
+        if key not in cur_exact:
+            failures.append(f"exact '{key}': missing from current run")
+        elif cur_exact[key] != want:
+            failures.append(f"exact '{key}': baseline {want!r} != "
+                            f"current {cur_exact[key]!r}")
+    for key, want in base_tol.items():
+        if key not in cur_tol:
+            failures.append(f"tolerance '{key}': missing from current run")
+            continue
+        have = cur_tol[key]
+        denom = max(abs(float(want)), 1e-12)
+        rel = abs(float(have) - float(want)) / denom
+        line = (f"tolerance '{key}': baseline {want:.6g}, "
+                f"current {have:.6g} (drift {rel * 100:.1f}%)")
+        if rel > tolerance:
+            failures.append(line + f" > {tolerance * 100:.0f}% allowed")
+        else:
+            notes.append(line)
+    for key in cur_exact.keys() - base_exact.keys():
+        notes.append(f"exact '{key}': new (not in baseline) — ignored")
+    for key in cur_tol.keys() - base_tol.keys():
+        notes.append(f"tolerance '{key}': new (not in baseline) — ignored")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="benchmark JSON regression gate")
+    ap.add_argument("--current", required=True,
+                    help="JSON written by the benchmark run under test")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON "
+                         "(experiments/baselines/*.json)")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="max relative drift for tolerance keys "
+                         "(default 0.2)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="copy the current JSON over the baseline "
+                         "(intentional-change update flow) and exit 0")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.current):
+        print(f"check_bench: current run {args.current} not found "
+              "(did the benchmark run?)", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        os.makedirs(os.path.dirname(args.baseline) or ".", exist_ok=True)
+        shutil.copyfile(args.current, args.baseline)
+        print(f"check_bench: baseline {args.baseline} refreshed from "
+              f"{args.current}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"check_bench: baseline {args.baseline} not found — commit "
+              "one with --write-baseline", file=sys.stderr)
+        return 2
+
+    try:
+        base_exact, base_tol = load_gate(args.baseline)
+        cur_exact, cur_tol = load_gate(args.current)
+    except (ValueError, json.JSONDecodeError) as e:
+        print(f"check_bench: {e}", file=sys.stderr)
+        return 2
+
+    failures, notes = compare(base_exact, base_tol, cur_exact, cur_tol,
+                              args.tolerance)
+    name = os.path.basename(args.baseline)
+    for line in notes:
+        print(f"  [ok] {line}")
+    if failures:
+        print(f"check_bench: {name}: {len(failures)} regression(s):")
+        for line in failures:
+            print(f"  [FAIL] {line}")
+        return 1
+    print(f"check_bench: {name}: pass ({len(base_exact)} exact, "
+          f"{len(base_tol)} toleranced keys)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
