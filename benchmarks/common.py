@@ -9,8 +9,9 @@ from typing import Dict, Iterable, List
 import numpy as np
 
 from repro.configs import get_config
-from repro.serving import (EngineConfig, Request, SamplingParams, Scenario,
-                           ServingEngine, VirtualClock, WallClock)
+from repro.serving import (Cluster, ClusterConfig, EngineConfig, Request,
+                           SamplingParams, Scenario, ServingEngine,
+                           VirtualClock, WallClock)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                            "bench")
@@ -67,6 +68,18 @@ def run_scenario(cfg, ecfg: EngineConfig, scenario: Scenario, seed: int = 0,
     eng = ServingEngine(cfg, ecfg, seed=seed, clock=make_clock(clock))
     res = scenario.run(eng, max_steps=max_steps)
     return eng, res
+
+
+def run_cluster_scenario(cfg, ccfg: ClusterConfig, scenario: Scenario,
+                         seed: int = 0, clock: str = "virtual",
+                         max_steps: int = 20_000):
+    """Replay a scripted scenario on a fresh N-client :class:`Cluster`
+    (scenario.clients and ccfg.clients should agree; the front-end routes
+    the same seeded trace across the clients)."""
+    cl = Cluster(cfg, ccfg, seed=seed,
+                 clock_factory=lambda: make_clock(clock))
+    res = scenario.run(cl, max_steps=max_steps)
+    return cl, res
 
 
 def save_result(name: str, payload: Dict) -> str:

@@ -12,8 +12,8 @@ import traceback
 def main() -> None:
     fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
     from benchmarks import (ablation, comm, expert_balance, fault_tolerance,
-                            latency, overlap_ablation, paged_kv, roofline,
-                            scaling, throughput)
+                            frontend_routing, latency, overlap_ablation,
+                            paged_kv, roofline, scaling, throughput)
 
     suites = [("fig12_comm", comm.main),
               ("fig13_ablation", ablation.main),
@@ -25,7 +25,8 @@ def main() -> None:
                   ("fig10_fault_tolerance", fault_tolerance.main),
                   ("fig11_scaling", scaling.main),
                   ("paged_kv", paged_kv.main),
-                  ("expert_balance", expert_balance.main)] + suites
+                  ("expert_balance", expert_balance.main),
+                  ("frontend_routing", frontend_routing.main)] + suites
 
     print("name,us_per_call,derived")
     failures = 0

@@ -1,11 +1,15 @@
 """End-to-end serving driver (the paper's deployment kind): serve a reduced
-DeepSeek-R1-family MoE with batched requests through the continuous-batching
-engine, inject a hardware failure mid-run, rebalance hot experts, and print
-throughput / inter-token-latency metrics.
+DeepSeek-R1-family MoE through the cluster front-end — N attention clients
+sharing one expert tier — inject a hardware failure mid-run, rebalance hot
+experts, and print throughput / inter-token-latency metrics.
 
 Run:  PYTHONPATH=src python examples/serve_moe.py [--requests 16]
+      PYTHONPATH=src python examples/serve_moe.py --clients 4 \
+          --frontend-policy least_loaded     # the M:N attention:expert shape
       PYTHONPATH=src python examples/serve_moe.py --kv-mode paged \
           [--kv-blocks 13]    # paged KV; small pools exercise preemption
+      PYTHONPATH=src python examples/serve_moe.py --clients 4 \
+          --fail-client 1     # strand one client's work mid-run
 """
 
 import argparse
@@ -13,7 +17,9 @@ import argparse
 import numpy as np
 
 from repro.configs import get_config
-from repro.serving import EngineConfig, Request, SamplingParams, ServingEngine
+from repro.serving import (Cluster, ClusterConfig, EngineConfig, Request,
+                           SamplingParams)
+from repro.serving.frontend import FRONTEND_POLICIES
 from repro.training.data import ShareGPTLike
 
 
@@ -21,7 +27,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--mode", default="eaas",
-                    choices=["eaas", "monolithic_ep", "tp"])
+                    choices=["eaas", "monolithic_ep"])
+    ap.add_argument("--clients", type=int, default=1,
+                    help="attention clients sharing the expert tier")
+    ap.add_argument("--frontend-policy", default="round_robin",
+                    choices=list(FRONTEND_POLICIES),
+                    help="request routing across clients")
+    ap.add_argument("--fail-client", type=int, default=None,
+                    help="kill this attention client mid-run (its in-flight "
+                         "requests strand; everyone else keeps serving)")
     ap.add_argument("--kv-mode", default="dense", choices=["dense", "paged"],
                     help="paged = block-pool KV cache with prefix caching")
     ap.add_argument("--kv-blocks", type=int, default=None,
@@ -37,7 +51,9 @@ def main():
                         # paged prefill runs the chunk path; chunking also
                         # bounds decode gaps while long prompts admit
                         prefill_chunk=(8 if args.kv_mode == "paged" else 0))
-    eng = ServingEngine(cfg, ecfg, seed=0)
+    cluster = Cluster(cfg, ClusterConfig(clients=args.clients,
+                                         frontend_policy=args.frontend_policy,
+                                         engine=ecfg), seed=0)
 
     # ShareGPT-like workload (bucketed prompt lengths bound prefill compiles)
     dist = ShareGPTLike(seed=0)
@@ -45,31 +61,38 @@ def main():
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(np.clip(2 ** int(np.log2(max(plens[i] // 64, 1)) + 3), 8, 32))
-        eng.submit(Request(
+        cluster.submit(Request(
             i, rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
             SamplingParams(max_new_tokens=int(min(rlens[i] // 32 + 8, 24)))))
 
-    def chaos(e):
-        if e.step_idx == 12:
-            print(f"[t={e.clock:.2f}s] *** injecting failure of server 1 "
-                  f"(mode={args.mode}) ***")
-            e.inject_server_failure(1)
-        if e.step_idx == 30:
-            print(f"[t={e.clock:.2f}s] server 1 recovers + EPLB rebalance")
-            e.recover_server(1)
-            e.rebalance()
+    def chaos(c):
+        if c.step_idx == 12:
+            print(f"[t={c.clock:.2f}s] *** injecting failure of expert "
+                  f"server 1 (mode={args.mode}) ***")
+            c.inject_server_failure(1)
+        if c.step_idx == 30:
+            print(f"[t={c.clock:.2f}s] server 1 recovers + EPLB rebalance")
+            c.recover_server(1)
+            c.rebalance()
+        if args.fail_client is not None and c.step_idx == 40:
+            print(f"[t={c.clock:.2f}s] *** attention client "
+                  f"{args.fail_client} dies (in-flight work strands) ***")
+            c.fail_client(args.fail_client)
 
-    metrics = eng.run(max_steps=4000, on_step=chaos)
+    metrics = cluster.run(max_steps=4000, on_step=chaos)
     print("\n=== serving summary ===")
     for k, v in metrics.summary().items():
         print(f"  {k}: {v}")
-    halted = sum(1 for t in metrics.timeline if t.get("halted"))
+    halted = sum(1 for c in cluster.clients
+                 for t in c.metrics.timeline if t.get("halted"))
     print(f"  halted steps: {halted}")
-    if eng.kv_pool is not None:
-        print(f"  kv pool: {eng.kv_pool.usable_blocks} blocks x "
-              f"{eng.kv_pool.block_size} tokens, "
-              f"free fraction {eng.kv_pool.free_fraction():.2f}")
-    assert metrics.completed == args.requests
+    for i, eng in enumerate(cluster.clients):
+        if eng.kv_pool is not None:
+            print(f"  client {i} kv pool: {eng.kv_pool.usable_blocks} blocks"
+                  f" x {eng.kv_pool.block_size} tokens, "
+                  f"free fraction {eng.kv_pool.free_fraction():.2f}")
+    expect = args.requests - metrics.failed_requests
+    assert metrics.completed == expect, (metrics.completed, expect)
 
 
 if __name__ == "__main__":

@@ -104,6 +104,10 @@ class ServerPool:
             self.stats.ema, self.smap.table, self.num_servers,
             alive=self.smap.alive, capacities=self.capacities)
 
+    def client_view(self, client_id: int = 0) -> "PoolClient":
+        """A per-client handle on this shared pool (cluster front-end)."""
+        return PoolClient(self, client_id)
+
     def apply_plan(self, mapping: np.ndarray, red: np.ndarray) -> None:
         """Adopt a placement wholesale, preserving liveness (the one-shot
         path; the rebalance controller instead converges incrementally via
@@ -181,7 +185,59 @@ class ServerPool:
                                       self.num_servers, m.capacity_factor),
             gemm_impl=gemm_impl,
             route_bias=jnp.asarray(self.route_bias),
+            replica_weights=(None if self.capacities is None
+                             else jnp.asarray(self.capacities, jnp.float32)),
         )
+
+
+class PoolClient:
+    """One attention client's handle on a *shared* :class:`ServerPool`.
+
+    The paper's clients each keep a local expert-to-server mapping *mask*
+    over the shared service-discovery table: the table itself (placement,
+    replicas, global liveness) is one object every client reads — so
+    expert-replica failures and migrations are observed consistently — while
+    a client may additionally mask out servers *it* has locally observed
+    misbehaving (e.g. a request timeout) before the monitor confirms the
+    failure pool-wide.  Everything except :meth:`runtime` delegates to the
+    underlying pool; ``runtime`` ANDs the client mask into the liveness
+    array fed to the jitted step (pure data — never recompiles).
+    """
+
+    def __init__(self, pool: ServerPool, client_id: int = 0):
+        self.pool = pool
+        self.client_id = client_id
+        self._masked: set = set()      # server ranks this client masked out
+
+    # ------------------------------------------------------- client mask
+    def mask_server(self, rank: int) -> None:
+        """Locally stop routing to ``rank`` (this client only)."""
+        self._masked.add(int(rank))
+
+    def unmask_server(self, rank: int) -> None:
+        self._masked.discard(int(rank))
+
+    @property
+    def masked_servers(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._masked))
+
+    def alive_mask(self) -> np.ndarray:
+        """(S,) shared liveness AND the client's local mask."""
+        mask = self.pool.smap.alive.copy()
+        for r in self._masked:
+            if r < mask.shape[0]:
+                mask[r] = False
+        return mask
+
+    def runtime(self, gemm_impl: str = "auto") -> MoERuntime:
+        rt = self.pool.runtime(gemm_impl)
+        if not self._masked:
+            return rt                  # fast path: the shared view verbatim
+        return rt._replace(alive=jnp.asarray(self.alive_mask()))
+
+    # ------------------------------------------------------- delegation
+    def __getattr__(self, name):
+        return getattr(self.pool, name)
 
 
 def provision(request_rate: float, rate_per_server: float,

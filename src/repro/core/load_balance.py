@@ -67,7 +67,12 @@ def eplb_plan(load: np.ndarray, num_servers: int, n_redundant: int,
     ``capacities`` (S,) models heterogeneous servers (paper §4.5 degree of
     freedom 3): loads are normalized by relative capacity when picking the
     least-loaded replica target, so a 2x server absorbs 2x the traffic
-    before it looks "full".  All sort orders are stable, so the plan is a
+    before it looks "full".  (Clients additionally *spread* tokens over a
+    replica set proportionally to capacity — see :func:`server_loads` /
+    ``mapping.lookup`` — the planner's internal accounting keeps the
+    uniform-share approximation, which is conservative: it under-credits
+    big servers, never overloads them.)  All sort orders are stable, so the
+    plan is a
     deterministic function of (load, S, n_redundant, max_replicas,
     capacities) — identical EMAs always produce the identical plan.
     """
@@ -133,20 +138,30 @@ def eplb_plan(load: np.ndarray, num_servers: int, n_redundant: int,
 
 
 def server_loads(load: np.ndarray, mapping: np.ndarray, num_servers: int,
-                 alive: Optional[np.ndarray] = None) -> np.ndarray:
-    """(S,) expected per-server load under uniform spreading over *alive*
-    replicas — the same client policy :func:`repro.core.mapping.lookup`
-    implements with its salt."""
+                 alive: Optional[np.ndarray] = None,
+                 capacities: Optional[np.ndarray] = None) -> np.ndarray:
+    """(S,) expected per-server load under the client spreading policy
+    :func:`repro.core.mapping.lookup` implements with its salt: uniform
+    over the alive replicas when ``capacities`` is None, proportional to
+    relative capacity otherwise (a 2x server absorbs 2x the replica
+    traffic)."""
     load = np.asarray(load, np.float64)
     ok = (np.ones(num_servers, bool) if alive is None
           else np.asarray(alive, bool))
+    cap = (None if capacities is None
+           else np.asarray(capacities, np.float64))
     out = np.zeros(num_servers, np.float64)
     for e in range(load.shape[0]):
         reps = [int(s) for s in mapping[e] if s >= 0 and ok[s]]
         if not reps:
             continue
-        for s in reps:
-            out[s] += load[e] / len(reps)
+        if cap is None:
+            for s in reps:
+                out[s] += load[e] / len(reps)
+        else:
+            total = sum(cap[s] for s in reps)
+            for s in reps:
+                out[s] += load[e] * cap[s] / max(total, 1e-12)
     return out
 
 
@@ -154,13 +169,15 @@ def imbalance(load: np.ndarray, mapping: np.ndarray, num_servers: int,
               alive: Optional[np.ndarray] = None,
               capacities: Optional[np.ndarray] = None) -> float:
     """max/mean capacity-normalized per-server load over the alive servers
-    under uniform replica spreading.  1.0 = perfectly balanced; this is the
+    under the client spreading policy (uniform, or capacity-proportional
+    when ``capacities`` is given).  1.0 = perfectly balanced; this is the
     factor by which the slowest server stretches a lockstep expert phase."""
     ok = (np.ones(num_servers, bool) if alive is None
           else np.asarray(alive, bool))
     if not ok.any():
         return 1.0
-    eff = server_loads(load, mapping, num_servers, alive)
+    eff = server_loads(load, mapping, num_servers, alive,
+                       capacities=capacities)
     if capacities is not None:
         eff = eff / np.asarray(capacities, np.float64)
     eff = eff[ok]

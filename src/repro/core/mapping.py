@@ -12,7 +12,7 @@ returns the jnp views fed to the jitted step.
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,12 +66,26 @@ def default_mapping(num_experts: int, num_servers: int,
     return table
 
 
+# quantization of the salt-derived uniform used for weighted replica picks;
+# coarse enough to stay exact in fp32, fine enough that capacity ratios up
+# to ~1000:1 still resolve
+_WEIGHT_QUANT = 4096
+
+
 def lookup(table: jax.Array, alive: jax.Array, expert_ids: jax.Array,
-           salt: jax.Array) -> jax.Array:
+           salt: jax.Array,
+           weights: Optional[jax.Array] = None) -> jax.Array:
     """Pick an alive replica server per (token, k) routing decision.
 
     table: (E, R) int32; alive: (S,) bool; expert_ids: (T, k) int32;
-    salt: (T, k) int32 (e.g. token index — spreads load across replicas).
+    salt: (T, k) int32 (e.g. token index — spreads load across replicas);
+    weights: optional (S,) fp32 relative server capacities — when given,
+    tokens spread over the alive replicas *proportionally* to capacity
+    (a 2x server absorbs 2x the replica traffic) instead of uniformly,
+    via the same deterministic salt (no RNG: the salt quantizes to a
+    uniform in [0, 1) and picks the replica whose cumulative-capacity
+    interval contains it).  ``weights=None`` is the homogeneous pool and
+    reproduces the uniform ``salt % count`` spreading bit-exactly.
     Returns server ids (T, k) int32.  If every replica of an expert is dead
     the token falls back to server 0 (counted upstream as a routing error —
     the monitor repairs the table long before this can happen in practice).
@@ -79,9 +93,21 @@ def lookup(table: jax.Array, alive: jax.Array, expert_ids: jax.Array,
     cand = table[expert_ids]                                 # (T, k, R)
     ok = (cand >= 0) & alive[jnp.clip(cand, 0, None)]        # (T, k, R)
     cnt = ok.sum(axis=-1)                                    # (T, k)
-    pick = salt % jnp.maximum(cnt, 1)                        # (T, k)
-    prefix = jnp.cumsum(ok.astype(jnp.int32), axis=-1)       # 1-based rank
-    sel = ok & (prefix == (pick + 1)[..., None])
-    r = jnp.argmax(sel, axis=-1)                             # first match
+    if weights is None:
+        pick = salt % jnp.maximum(cnt, 1)                    # (T, k)
+        prefix = jnp.cumsum(ok.astype(jnp.int32), axis=-1)   # 1-based rank
+        sel = ok & (prefix == (pick + 1)[..., None])
+        r = jnp.argmax(sel, axis=-1)                         # first match
+    else:
+        w = jnp.where(ok, weights[jnp.clip(cand, 0, None)], 0.0)
+        total = w.sum(axis=-1)                               # (T, k)
+        # multiplicative hash (Knuth; odd -> a bijection mod the quant) so
+        # the small sequential token-index salts of one step spread over
+        # the whole [0, 1) lattice instead of clustering near zero
+        h = (salt.astype(jnp.uint32) * jnp.uint32(2654435761)) \
+            % jnp.uint32(_WEIGHT_QUANT)
+        u = (h.astype(jnp.float32) + 0.5) / _WEIGHT_QUANT * total
+        csum = jnp.cumsum(w, axis=-1)                        # (T, k, R)
+        r = jnp.argmax(csum > u[..., None], axis=-1)         # first cover
     server = jnp.take_along_axis(cand, r[..., None], axis=-1)[..., 0]
     return jnp.where(cnt > 0, server, 0).astype(jnp.int32)

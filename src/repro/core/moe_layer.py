@@ -48,6 +48,11 @@ class MoERuntime(NamedTuple):
     # (E,) fp32 router-logit offset (traffic shaping — scenario set_skew);
     # None = unbiased.  Data like the mapping: rewriting it never recompiles.
     route_bias: Optional[jax.Array] = None
+    # (S,) fp32 relative server capacities — replica picks spread tokens
+    # proportionally to these (heterogeneous pools, paper §4.5 degree of
+    # freedom 3); None = homogeneous, uniform spreading (bit-identical to
+    # the pre-capacity behaviour).
+    replica_weights: Optional[jax.Array] = None
 
 
 class MoEStats(NamedTuple):
@@ -155,7 +160,8 @@ def eaas_moe_apply(params: Dict, x: jax.Array, cfg_moe: MoEConfig,
         token_salt = jnp.arange(T, dtype=jnp.int32)[:, None] + jnp.arange(
             r.expert_ids.shape[1], dtype=jnp.int32)[None, :]
     server_ids = emap.lookup(runtime.mapping, runtime.alive,
-                             r.expert_ids, token_salt)
+                             r.expert_ids, token_salt,
+                             weights=runtime.replica_weights)
 
     # ---- client: pack buffer slots (paper §3.2) --------------------------
     buffers = dispatch.pack(x, r.expert_ids, r.scores, server_ids, S, C,

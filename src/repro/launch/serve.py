@@ -1,9 +1,14 @@
-"""Serving launcher: the EAAS engine on a selectable architecture.
+"""Serving launcher: the EAAS cluster front-end on a selectable architecture.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch kimi-k2-1t-a32b \
         --reduced --requests 12 [--mode eaas|monolithic_ep|tp] \
+        [--clients 4 --frontend-policy least_loaded] \
         [--fail-at 12:1] [--servers 4]
+
+``--clients N`` runs the paper's M:N attention:expert shape through
+:class:`repro.serving.Cluster`; ``--mode tp`` has no disaggregated expert
+tier and therefore only supports a single client.
 """
 
 from __future__ import annotations
@@ -14,7 +19,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.serving import EngineConfig, Request, SamplingParams, ServingEngine
+from repro.serving import (Cluster, ClusterConfig, EngineConfig, Request,
+                           SamplingParams, ServingEngine)
+from repro.serving.frontend import FRONTEND_POLICIES
 
 
 def main() -> None:
@@ -23,12 +30,16 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--mode", default="eaas",
                     choices=["eaas", "monolithic_ep", "tp"])
+    ap.add_argument("--clients", type=int, default=1,
+                    help="attention clients sharing the expert tier")
+    ap.add_argument("--frontend-policy", default="round_robin",
+                    choices=list(FRONTEND_POLICIES))
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--servers", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--fail-at", default=None,
-                    help="step:rank — inject a server failure")
+                    help="step:rank — inject an expert-server failure")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -39,10 +50,18 @@ def main() -> None:
                         max_batch=args.max_batch, max_seq=96,
                         n_redundant=2,
                         tp_batch_cap=max(args.max_batch // 2, 1))
-    eng = ServingEngine(cfg, ecfg, seed=0)
+    if args.mode == "tp" or not cfg.moe:
+        if args.clients != 1:
+            raise SystemExit("--clients > 1 needs a shared expert tier: "
+                             "an MoE arch in eaas/monolithic_ep mode")
+        system = ServingEngine(cfg, ecfg, seed=0)
+    else:
+        system = Cluster(cfg, ClusterConfig(
+            clients=args.clients, frontend_policy=args.frontend_policy,
+            engine=ecfg), seed=0)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
-        eng.submit(Request(
+        system.submit(Request(
             i, rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
             SamplingParams(max_new_tokens=args.max_new)))
 
@@ -51,12 +70,12 @@ def main() -> None:
         step_s, rank_s = args.fail_at.split(":")
         fail = (int(step_s), int(rank_s))
 
-    def on_step(e):
-        if fail and e.step_idx == fail[0]:
-            print(f"[t={e.clock:.2f}s] injecting failure of server {fail[1]}")
-            e.inject_server_failure(fail[1])
+    def on_step(s):
+        if fail and s.step_idx == fail[0]:
+            print(f"[t={s.clock:.2f}s] injecting failure of server {fail[1]}")
+            s.inject_server_failure(fail[1])
 
-    m = eng.run(max_steps=5000, on_step=on_step)
+    m = system.run(max_steps=5000, on_step=on_step)
     print("\n=== summary ===")
     for k, v in m.summary().items():
         print(f"  {k}: {v}")

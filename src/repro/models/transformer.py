@@ -674,6 +674,11 @@ def _build_decoder(cfg: ModelConfig, num_servers: int,
         against a cache already holding [0, start).  Composing chunks over a
         prompt reproduces :func:`prefill`'s logits and cache exactly (same
         rotated keys, same masked softmax — padding lanes are exact zeros).
+
+        Also returns the chunk's :class:`MoEStats` (summed over layers) so
+        chunked prefill feeds ``expert_load`` into the traffic EMA exactly
+        like decode steps do — long-prompt-heavy workloads rebalance from
+        prompt traffic, not just decode traffic.
         """
         B, C = tokens.shape
         start = jnp.asarray(start, jnp.int32)
@@ -683,17 +688,20 @@ def _build_decoder(cfg: ModelConfig, num_servers: int,
         if cfg.mrope_sections is not None:
             mrope = text_mrope_positions(
                 jnp.broadcast_to(pos[None], (B, C)))
+        stats_all = []
         if n_dense_prefix:
-            x, cd, _ = _scan_prefill_chunk(params["dense_blocks"],
-                                           cache["dense"], cfg, x, pos, ctx,
-                                           mrope=mrope)
+            x, cd, st = _scan_prefill_chunk(params["dense_blocks"],
+                                            cache["dense"], cfg, x, pos, ctx,
+                                            mrope=mrope)
             cache = dict(cache, dense=cd)
-        x, cb, _ = _scan_prefill_chunk(params["blocks"], cache["blocks"],
-                                       cfg, x, pos, ctx, mrope=mrope)
+            stats_all.append(st)
+        x, cb, st = _scan_prefill_chunk(params["blocks"], cache["blocks"],
+                                        cfg, x, pos, ctx, mrope=mrope)
         cache = dict(cache, blocks=cb)
+        stats_all.append(st)
         x = rms_norm(x, params["final_ln"], cfg.rms_norm_eps)
         logits = _logits(params, cfg, x[:, -1]).astype(jnp.float32)
-        return logits, cache
+        return logits, cache, _sum_stats(*stats_all)
 
     def decode_step(params, token, cache, ctx: ParallelCtx, batch=None):
         x = _embed_tokens(params, cfg, token, ctx)

@@ -1,21 +1,55 @@
-"""Serving runtime, split into scheduler / executor / engine layers:
-admission + step policy (``scheduler``, memory-aware over the paged-KV
-``kv_pool`` block manager: prefix caching, copy-on-write, preemption),
-params + caches + jitted step variants incl. chunked prefill, paged
-block-pool caches and two-microbatch pipelined decode (``executor``), and
-the orchestrating ``ServingEngine`` with the failover/rebalance/scale
-control plane.  Plus the host-level physically-disaggregated engine
-(paper-literal buffer protocol) and the deterministic scenario/autoscaling
-harness the paper's timeline claims are tested with."""
+"""Serving runtime.
+
+Public entrypoint: the :class:`Cluster` front-end — N attention clients
+(each a scheduler/executor/KV-pool ``ServingEngine``) sharing ONE
+disaggregated expert tier (``ServerPool``), with pluggable request routing
+(``FrontendRouter``: round_robin / least_loaded / session_affinity),
+per-client admission backpressure, and the cluster-owned placement control
+plane (live rebalancing, elastic scaling).  ``Cluster(clients=1)`` is the
+single-client special case; ``ServingEngine`` remains available as the
+per-client engine and for single-engine experiments.
+
+Layers underneath: admission + step policy (``scheduler``, memory-aware
+over the paged-KV ``kv_pool`` block manager: prefix caching, copy-on-write,
+preemption), params + caches + jitted step variants incl. chunked prefill,
+paged block-pool caches and two-microbatch pipelined decode (``executor``),
+the per-client ``ServingEngine`` orchestrator, and the deterministic
+scenario/autoscaling harness the paper's timeline claims are tested with
+(now cluster-aware: ``fail_client`` / ``recover_client`` /
+``set_frontend_policy`` events).
+
+Deprecated: ``repro.serving.Engine`` (alias of ``ServingEngine``) — the
+pre-cluster name for "the system"; use ``Cluster`` (or ``ServingEngine``
+explicitly for one client).  Kept for one release.
+"""
+
+import warnings
 
 from repro.serving.engine import ServingEngine, EngineConfig  # noqa: F401
+from repro.serving.cluster import Cluster, ClusterConfig  # noqa: F401
 from repro.serving.executor import Executor  # noqa: F401
+from repro.serving.frontend import (FrontendRouter,  # noqa: F401
+                                    FRONTEND_POLICIES, make_frontend_router)
 from repro.serving.kv_pool import BlockPool, block_hashes  # noqa: F401
 from repro.serving.request import Request, SamplingParams  # noqa: F401
 from repro.serving.clock import Clock, VirtualClock, WallClock  # noqa: F401
+from repro.serving.metrics import (ClusterMetrics,  # noqa: F401
+                                   ServingMetrics)
 from repro.serving.scenario import (Scenario, ScenarioResult,  # noqa: F401
                                     zipf_bias)
 from repro.serving.scheduler import Scheduler, SchedulerConfig  # noqa: F401
 from repro.serving.autoscale import Autoscaler, AutoscalerConfig  # noqa: F401
 from repro.serving.rebalance import (RebalanceConfig,  # noqa: F401
                                      RebalanceController)
+
+
+def __getattr__(name):
+    if name == "Engine":
+        warnings.warn(
+            "repro.serving.Engine is deprecated: the public serving API is "
+            "repro.serving.Cluster (N attention clients sharing one expert "
+            "tier); import ServingEngine explicitly if you want a single "
+            "client engine.  This alias will be removed next release.",
+            DeprecationWarning, stacklevel=2)
+        return ServingEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

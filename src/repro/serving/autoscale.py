@@ -96,12 +96,14 @@ class Autoscaler:
         if (t - getattr(engine, "last_placement_change", float("-inf"))
                 < self.cfg.cooldown):
             return None
+        # engine-level signal methods so one policy loop drives both a
+        # standalone engine and a Cluster (which aggregates over clients)
         backlog = 0
         if self.cfg.prefill_tokens_per_server > 0:
-            backlog = engine.scheduler.pending_prefill_tokens()
+            backlog = engine.pending_prefill_tokens()
         kv_free = 1.0
         if self.cfg.kv_pressure_threshold > 0:
-            kv_free = engine.scheduler.kv_free_fraction()
+            kv_free = engine.kv_free_fraction()
         want = self.desired_servers(t, len(engine.queue), backlog, kv_free)
         # snap up to the nearest pool size the expert layout supports
         feasible = [n for n in engine.pool.feasible_counts()

@@ -41,7 +41,8 @@ class Clock:
 
     def stop(self, kind: str, *, result=None, tokens: int = 0,
              servers: int = 1, alive_frac: float = 1.0,
-             overlap: bool = False, imbalance: float = 1.0) -> float:
+             overlap: bool = False, imbalance: float = 1.0,
+             contention: float = 1.0) -> float:
         """End the bracket opened by :meth:`start`.
 
         kind: "prefill" | "decode" | "migrate"; result: a jax array to
@@ -57,7 +58,13 @@ class Clock:
         expert phase finishes with its hottest server, so virtual clocks
         stretch the expert share of a decode step by this factor (the cost
         hot-expert skew actually exacts; 1.0 = balanced, the default,
-        reproduces the unstretched model bit-exactly).
+        reproduces the unstretched model bit-exactly); contention: how
+        many attention clients are currently sharing the expert tier (the
+        cluster front-end sets this) — the expert share of a decode step
+        stretches by it, exactly like imbalance, while the attention/client
+        share is the client's own hardware and never contends.  1.0 (the
+        default, and any single-engine run) reproduces the pre-cluster
+        model bit-exactly.
         """
         raise NotImplementedError
 
@@ -77,7 +84,8 @@ class WallClock(Clock):
 
     def stop(self, kind: str, *, result=None, tokens: int = 0,
              servers: int = 1, alive_frac: float = 1.0,
-             overlap: bool = False, imbalance: float = 1.0) -> float:
+             overlap: bool = False, imbalance: float = 1.0,
+             contention: float = 1.0) -> float:
         if result is not None:
             result.block_until_ready()
         return time.perf_counter() - self._t0
@@ -118,7 +126,8 @@ class VirtualClock(Clock):
 
     def stop(self, kind: str, *, result=None, tokens: int = 0,
              servers: int = 1, alive_frac: float = 1.0,
-             overlap: bool = False, imbalance: float = 1.0) -> float:
+             overlap: bool = False, imbalance: float = 1.0,
+             contention: float = 1.0) -> float:
         if kind == "migrate":
             # weight movement doesn't parallelize over the pool (each copy
             # lands on one server) and is unaffected by liveness
@@ -130,10 +139,13 @@ class VirtualClock(Clock):
             dt = self.prefill_base + self.prefill_per_token * work
         else:
             var = self.decode_per_token * work
-            if overlap or imbalance > 1.0:
+            if overlap or imbalance > 1.0 or contention > 1.0:
                 # the expert phase finishes with its hottest server: skew
-                # stretches the expert share by max/mean server load
-                expert = self.expert_share * var * max(imbalance, 1.0)
+                # stretches the expert share by max/mean server load, and
+                # N front-end clients sharing the tier stretch it N-fold
+                # (their attention shares run on private hardware)
+                expert = (self.expert_share * var * max(imbalance, 1.0)
+                          * max(contention, 1.0))
                 client = (1.0 - self.expert_share) * var
                 var = (max(expert, client) + self.overlap_eps if overlap
                        else expert + client)

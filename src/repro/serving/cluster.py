@@ -1,0 +1,417 @@
+"""Cluster front-end: N attention clients sharing one expert tier.
+
+This is the paper's deployment shape and the public serving API.  A
+:class:`Cluster` owns
+
+* ONE shared :class:`~repro.core.elastic.ServerPool` — the disaggregated
+  expert tier: placement table, liveness, traffic EMA, redundant replicas;
+* N :class:`~repro.serving.engine.ServingEngine` *clients* — each keeps its
+  own scheduler, executor, KV pool and clock, and reads the shared pool
+  through a per-client :class:`~repro.core.elastic.PoolClient` mapping
+  view, so expert-server failures and replica migrations are observed
+  consistently by everyone;
+* the placement control plane — the ONE
+  :class:`~repro.serving.rebalance.RebalanceController` (expert-weight
+  migration chunks fan out to every client's executor so replicas never
+  diverge) and elastic ``scale_to`` (every executor re-shards in lockstep);
+* a pluggable :class:`~repro.serving.frontend.FrontendRouter` with
+  per-client admission backpressure — requests enter through
+  :meth:`submit` into the ingress queue and are routed when a client is
+  admissible.
+
+Time: each client advances its own clock; :meth:`step` always steps the
+*most-behind alive* client (ties to the lowest index), so the interleaving
+is a deterministic function of the request trace — a seeded scenario
+replayed at N=1 and N=4 routes differently but computes the same
+per-request token streams bitwise (drop-free dispatch; replicas carry
+identical weights).  Under ``charge_contention`` the
+:class:`~repro.serving.clock.VirtualClock` stretches the expert share of
+every decode step by the number of clients with live work — the shared
+expert tier serves everyone, the attention share stays private.
+
+Fault model ("Surviving Partial Rank Failures", client side): a client
+failure strands only its in-flight requests — the expert tier and every
+other client keep serving, so cluster throughput dips by roughly the dead
+client's share instead of the monolithic whole-engine stall.  The
+per-request work is lost (counted in ``metrics.failed_requests``), never
+silently retried.
+
+Migration note: ``ServingEngine`` remains the single-client engine and is
+what a ``Cluster(clients=1)`` wraps; ``repro.serving.Engine`` is a
+deprecated alias kept for one release.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional
+
+from collections import deque
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.elastic import ServerPool
+from repro.serving.clock import Clock, WallClock
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.frontend import (FrontendRouter, make_frontend_router)
+from repro.serving.metrics import ClusterMetrics
+from repro.serving.rebalance import (RebalanceConfig, RebalanceController,
+                                     oneshot_rebalance)
+from repro.serving.request import Request
+
+
+@dataclass
+class ClusterConfig:
+    """Front-end shape + the per-client engine template."""
+
+    clients: int = 1
+    frontend_policy: str = "round_robin"
+    # per-client admission backpressure: a client whose local queue holds
+    # this many requests is closed to new routed work; requests wait in the
+    # cluster ingress queue until somebody drains (0 = unbounded)
+    max_client_queue: int = 0
+    # stretch the expert share of decode steps by the number of clients
+    # with live work (virtual clocks; the shared-tier contention charge).
+    # Off by default: per-client timelines are then bit-identical to the
+    # same engine running standalone.
+    charge_contention: bool = False
+    # the per-client engine template (mode must be eaas or monolithic_ep;
+    # rebalance_interval > 0 enables the CLUSTER-level controller)
+    engine: EngineConfig = field(default_factory=EngineConfig)
+
+
+class Cluster:
+    """N attention clients + one shared expert tier + a front-end router.
+
+    The public entrypoints mirror the single-engine surface —
+    ``submit`` / ``step`` / ``run`` / ``metrics`` plus the scenario control
+    verbs — so :class:`~repro.serving.scenario.Scenario` timelines replay
+    against a cluster unchanged.
+    """
+
+    def __init__(self, cfg: ModelConfig, ccfg: ClusterConfig,
+                 seed: int = 0,
+                 clock_factory: Optional[Callable[[], Clock]] = None):
+        if ccfg.clients < 1:
+            raise ValueError(f"need at least one client, got {ccfg.clients}")
+        ecfg = ccfg.engine
+        if ecfg.mode not in ("eaas", "monolithic_ep"):
+            raise ValueError(
+                f"cluster clients share one expert tier — mode {ecfg.mode!r}"
+                " is not disaggregated (use eaas or monolithic_ep)")
+        if not cfg.moe:
+            raise ValueError("Cluster serves MoE configs (the expert tier "
+                             "is the shared resource)")
+        self.cfg = cfg
+        self.ccfg = ccfg
+        clock_factory = clock_factory or WallClock
+        # ---- the ONE expert tier ----------------------------------------
+        self.pool = ServerPool(
+            cfg, ecfg.num_servers,
+            tokens_per_client=(ecfg.pool_tokens_per_client
+                               or ecfg.max_batch),
+            n_redundant=(ecfg.n_redundant if ecfg.mode == "eaas" else 0),
+            capacities=ecfg.server_capacities)
+        # ---- N clients over per-client mapping views --------------------
+        # all clients share the initial params (same seed -> the cluster is
+        # N replicas of one model; migrations keep every copy in lockstep
+        # through apply_migration)
+        self.clients: List[ServingEngine] = []
+        params = None
+        for i in range(ccfg.clients):
+            eng = ServingEngine(cfg, ecfg, params=params, seed=seed,
+                                clock=clock_factory(),
+                                pool=self.pool.client_view(i), client_id=i)
+            params = eng.executor.params
+            self.clients.append(eng)
+        self.client_alive = [True] * ccfg.clients
+        # ---- front-end --------------------------------------------------
+        self.router: FrontendRouter = make_frontend_router(
+            ccfg.frontend_policy, ccfg.clients,
+            block_size=(ecfg.kv_block_size
+                        if ecfg.kv_mode == "paged" else None))
+        self.ingress: Deque[Request] = deque()
+        # ---- control plane ----------------------------------------------
+        self.clk = clock_factory()       # charges shared-tier migrations
+        self.rebalancer: Optional[RebalanceController] = None
+        if ecfg.rebalance_interval > 0 and ecfg.mode == "eaas":
+            self.rebalancer = RebalanceController(RebalanceConfig(
+                interval=ecfg.rebalance_interval,
+                chunk=ecfg.rebalance_chunk,
+                min_gain=ecfg.rebalance_min_gain,
+                cooldown=ecfg.rebalance_cooldown))
+            for eng in self.clients:
+                # members surface the pool imbalance gauge the cluster's
+                # controller plans from (their own rebalancer stays None)
+                eng.track_imbalance = True
+        self.last_placement_change = float("-inf")
+        self.metrics = ClusterMetrics(
+            per_client=[c.metrics for c in self.clients],
+            routed=[0] * ccfg.clients)
+        self.step_idx = 0
+
+    # ------------------------------------------------------------- time
+    @property
+    def clock(self) -> float:
+        """The cluster time base: the most-behind alive client (that is the
+        next client to act).  With no survivors, the latest client time."""
+        alive = [c.clock for c, ok in zip(self.clients, self.client_alive)
+                 if ok]
+        if alive:
+            return min(alive)
+        return max((c.clock for c in self.clients), default=0.0)
+
+    # ------------------------------------------------- engine-like surface
+    @property
+    def queue(self) -> List[Request]:
+        """Every request not yet in a slot (ingress + client queues) — the
+        scenario harness's busy signal."""
+        out = list(self.ingress)
+        for c in self.clients:
+            out.extend(c.queue)
+        return out
+
+    @property
+    def slots(self) -> List[Optional[Request]]:
+        return [s for c in self.clients for s in c.slots]
+
+    def pending_prefill_tokens(self) -> int:
+        """Cluster-wide unprefilled backlog (ingress + every client) — the
+        autoscaler's prefill-pressure signal."""
+        pending = sum(c.pending_prefill_tokens() for c in self.clients)
+        pending += sum(len(r.prompt) for r in self.ingress)
+        return pending
+
+    def kv_free_fraction(self) -> float:
+        """The tightest client's free KV fraction — memory pressure on ANY
+        client throttles what the cluster can admit there."""
+        fracs = [c.kv_free_fraction()
+                 for c, ok in zip(self.clients, self.client_alive) if ok]
+        return min(fracs) if fracs else 1.0
+
+    # ------------------------------------------------------------ ingress
+    def submit(self, req: Request) -> None:
+        if not any(self.client_alive):
+            # no client will ever route this: fail fast, keep the
+            # completed == total - failed invariant under continued traffic
+            self.metrics.ingress_failed += 1
+            self.metrics.failed_requests += 1
+            return
+        self.ingress.append(req)
+
+    def _admissible(self) -> List:
+        cap = self.ccfg.max_client_queue
+        out = []
+        for i, eng in enumerate(self.clients):
+            if not self.client_alive[i]:
+                continue
+            if cap > 0 and len(eng.queue) >= cap:
+                continue
+            out.append((i, eng))
+        return out
+
+    def _route_ingress(self) -> None:
+        """Drain the ingress queue head-of-line through the router until
+        nobody is admissible (per-client backpressure holds the rest)."""
+        while self.ingress:
+            candidates = self._admissible()
+            if not candidates:
+                return
+            req = self.ingress.popleft()
+            idx = self.router.pick(req, candidates)
+            self.clients[idx].submit(req)
+            self.metrics.routed[idx] += 1
+
+    # --------------------------------------------------------------- step
+    @staticmethod
+    def _has_work(eng: ServingEngine) -> bool:
+        return bool(eng.queue) or any(s is not None for s in eng.slots)
+
+    def _next_client(self) -> Optional[int]:
+        """The most-behind alive client WITH work (ties to the lowest
+        index).  Clients with nothing to do never gate cluster time: they
+        are fast-forwarded to the busy frontier instead of burning idle
+        sweeps — under a wall clock this also absorbs per-client
+        compile-time spikes without starving anyone.  When nobody has
+        work, the most-behind client takes an idle step so time still
+        advances toward the next scheduled arrival."""
+        alive = [i for i, ok in enumerate(self.client_alive) if ok]
+        if not alive:
+            return None
+        busy = [i for i in alive if self._has_work(self.clients[i])]
+        if not busy:
+            return min(alive, key=lambda i: (self.clients[i].clock, i))
+        frontier = min(self.clients[i].clock for i in busy)
+        for i in alive:
+            if i not in busy and self.clients[i].clock < frontier:
+                self.clients[i].clock = frontier
+        return min(busy, key=lambda i: (self.clients[i].clock, i))
+
+    def _active_clients(self) -> int:
+        """Clients with live work — the shared-tier contention factor."""
+        n = sum(1 for i, eng in enumerate(self.clients)
+                if self.client_alive[i] and self._has_work(eng))
+        return max(n, 1)
+
+    def step(self) -> None:
+        """One cluster iteration: route what the front-end can place, then
+        advance the most-behind alive client by one engine step."""
+        self.step_idx += 1
+        self._route_ingress()
+        i = self._next_client()
+        if i is None:
+            return                       # every client is dead
+        eng = self.clients[i]
+        eng.expert_contention = (float(self._active_clients())
+                                 if self.ccfg.charge_contention else 1.0)
+        eng.step()
+        if self.rebalancer is not None:
+            # ONE controller for the shared tier: migration chunks
+            # interleave with whichever client steps next
+            self.rebalancer.step(self)
+
+    def has_work(self) -> bool:
+        """Anything outstanding anywhere (ingress, queues, slots) — the
+        cheap busy probe (no list materialization, early exit)."""
+        return bool(self.ingress) or any(self._has_work(c)
+                                         for c in self.clients)
+
+    def run(self, max_steps: int = 10_000,
+            on_step: Optional[Callable[["Cluster"], None]] = None
+            ) -> ClusterMetrics:
+        """Drive until ingress + client queues + slots drain."""
+        while self.has_work() and self.step_idx < max_steps:
+            if not any(self.client_alive):
+                break                    # nobody left to serve the backlog
+            if on_step:
+                on_step(self)
+            self.step()
+        self.metrics.wall_time = self.clock
+        return self.metrics
+
+    # --------------------------------------------- shared-tier control
+    def _pool_event(self, event: str, **kw) -> None:
+        self.metrics.events.append(dict({"t": self.clock, "event": event},
+                                        **kw))
+
+    def inject_server_failure(self, rank: int) -> None:
+        """An EXPERT server dies: one shared liveness flip that every
+        client's next step observes (the consistent-mask property).  In
+        monolithic mode every client is one collective group — they all
+        stall."""
+        self._pool_event("server_fail", rank=rank,
+                         mode=self.ccfg.engine.mode)
+        if self.ccfg.engine.mode == "eaas":
+            if rank < self.pool.num_servers:
+                self.pool.server_failed(rank)
+        else:
+            for eng in self.clients:
+                eng.halted_until = (eng.step_idx
+                                    + self.ccfg.engine.restart_steps)
+
+    def recover_server(self, rank: int) -> None:
+        self._pool_event("server_recover", rank=rank)
+        if rank < self.pool.num_servers:
+            self.pool.server_recovered(rank)
+
+    def set_skew(self, bias: np.ndarray) -> None:
+        self.pool.set_route_bias(bias)
+        bias = np.asarray(bias, np.float64)
+        self._pool_event("set_skew",
+                         spread=round(float(bias.max() - bias.min()), 6))
+
+    def set_policy(self, policy: str) -> None:
+        """Scheduler policy on every client (scenario ``set_policy``)."""
+        for eng in self.clients:
+            eng.scheduler.set_policy(policy)
+        self._pool_event("set_policy", policy=policy)
+
+    def apply_migration(self, copies) -> None:
+        """Fan one expert-weight migration chunk out to every client's
+        executor — the shared tier has ONE placement, so every client's
+        weight copy moves together (dead clients included: they must be
+        current if they recover)."""
+        for eng in self.clients:
+            eng.executor.migrate_slots(copies)
+
+    def charge_migration(self, dt: float) -> None:
+        """The shared tier is busy copying weights: every alive client's
+        next expert phase waits behind it.  (The caller accounts the
+        ``migration_time`` metric.)"""
+        for i, eng in enumerate(self.clients):
+            if self.client_alive[i]:
+                eng.clock += dt
+
+    def rebalance(self) -> None:
+        """One-shot EPLB replan of the shared tier (scenario event)."""
+        if self.rebalancer is not None:
+            self.rebalancer.abort()
+        oneshot_rebalance(self)
+
+    def scale_to(self, n: int) -> None:
+        """Elastically resize the shared expert tier: one pool replan, then
+        every client's executor re-shards from the recovered global bank."""
+        if n == self.pool.num_servers:
+            return
+        old = self.pool.num_servers
+        if self.rebalancer is not None:
+            self.rebalancer.abort()
+        self.pool.scale_to(n)
+        for eng in self.clients:
+            eng.executor.resize(eng.pool)    # the client's PoolClient view
+        self.last_placement_change = self.clock
+        self._pool_event("scale", **{"from": old, "to": n})
+
+    # ------------------------------------------------- client fault model
+    def _check_client(self, i: int) -> None:
+        if not 0 <= i < len(self.clients):
+            raise ValueError(f"no client {i}: this cluster has "
+                             f"{len(self.clients)} clients")
+
+    def fail_client(self, i: int) -> None:
+        """An ATTENTION client dies.  Only its in-flight requests strand
+        (queued + slotted — lost, counted as failed); the expert tier and
+        the other clients never notice beyond the routed-traffic shift.
+        If the LAST client dies, ingress-held requests strand too — a
+        later ``recover_client`` starts from a clean slate, it does not
+        resurrect dropped work."""
+        self._check_client(i)
+        if not self.client_alive[i]:
+            return
+        self.client_alive[i] = False
+        stranded = self.clients[i].abort_inflight()
+        if not any(self.client_alive) and self.ingress:
+            # nobody left to route to: the front-end sheds its ingress
+            # queue rather than silently losing it from the accounting
+            self.metrics.ingress_failed += len(self.ingress)
+            stranded.extend(self.ingress)
+            self.ingress.clear()
+        self.metrics.failed_requests += len(stranded)
+        self._pool_event("client_fail", client=i, stranded=len(stranded))
+
+    def recover_client(self, i: int) -> None:
+        """The client rejoins empty (its KV state died with it) and
+        fast-forwards to cluster time — it was not accumulating work while
+        dead."""
+        self._check_client(i)
+        if self.client_alive[i]:
+            return
+        self.client_alive[i] = True
+        now = max((c.clock for c, ok in zip(self.clients, self.client_alive)
+                   if ok), default=self.clients[i].clock)
+        self.clients[i].clock = max(self.clients[i].clock, now)
+        self._pool_event("client_recover", client=i)
+
+    def set_frontend_policy(self, policy: str) -> None:
+        """Swap the request-routing policy mid-run (fresh router state)."""
+        self.router = make_frontend_router(
+            policy, self.ccfg.clients,
+            block_size=(self.ccfg.engine.kv_block_size
+                        if self.ccfg.engine.kv_mode == "paged" else None))
+        self._pool_event("set_frontend_policy", policy=policy)
+
+    # ----------------------------------------------------------- summary
+    def summary(self) -> Dict:
+        self.metrics.wall_time = self.clock
+        return self.metrics.summary()

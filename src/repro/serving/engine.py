@@ -48,7 +48,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import expert_server, load_balance
 from repro.core.elastic import ServerPool
 from repro.core.monitor import Monitor
 from repro.models.transformer import build_model
@@ -56,7 +55,8 @@ from repro.serving.clock import Clock, WallClock
 from repro.serving.executor import Executor
 from repro.serving.kv_pool import BlockPool
 from repro.serving.metrics import ServingMetrics
-from repro.serving.rebalance import RebalanceConfig, RebalanceController
+from repro.serving.rebalance import (RebalanceConfig, RebalanceController,
+                                     oneshot_rebalance)
 from repro.serving.request import Request
 from repro.serving.sampling import sample, sample_batch
 from repro.serving.scheduler import (DecodeBatch, PrefillChunk, Scheduler,
@@ -119,19 +119,44 @@ class EngineConfig:
     charge_imbalance: bool = False
     # relative per-server capacity weights ((num_servers,) or None)
     server_capacities: Optional[np.ndarray] = None
+    # feed chunked-prefill router traffic into the expert-load EMA (decode
+    # steps always feed it); prompt-heavy workloads then trigger rebalances
+    # from prefill pressure, not only after decoding starts
+    prefill_load_feedback: bool = True
 
 
 class ServingEngine:
-    """Scheduler → executor → metrics orchestrator with EAAS failover."""
+    """Scheduler → executor → metrics orchestrator with EAAS failover.
+
+    Standalone this is one complete serving system; under a
+    :class:`~repro.serving.cluster.Cluster` it is one *attention client* of
+    N — the cluster injects the shared expert-tier ``pool`` (usually a
+    per-client :class:`~repro.core.elastic.PoolClient` mapping view) and
+    owns the placement control plane (rebalance / scale), while each client
+    keeps its own scheduler, executor, KV pool and clock.
+    """
 
     def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig,
-                 params=None, seed: int = 0, clock: Optional[Clock] = None):
+                 params=None, seed: int = 0, clock: Optional[Clock] = None,
+                 pool=None, client_id: int = 0):
         self.cfg = cfg
         self.ecfg = engine_cfg
+        self.client_id = client_id
         self.clk = clock if clock is not None else WallClock()
         S = engine_cfg.num_servers if engine_cfg.mode != "tp" else 1
-        self.pool = None
-        if cfg.moe:
+        # pool injected = cluster member: the expert tier is shared, its
+        # placement is the cluster's to change (scale_to/rebalance here
+        # would desync the sibling clients' executors)
+        self._shared_pool = pool is not None
+        if self._shared_pool:
+            if not cfg.moe:
+                raise ValueError("shared expert pool needs an MoE config")
+            if engine_cfg.mode == "tp":
+                raise ValueError("tp mode replicates expert weights per "
+                                 "unit — it has no shared expert tier")
+            self.pool = pool
+            S = pool.num_servers
+        elif cfg.moe:
             self.pool = ServerPool(
                 cfg, S,
                 tokens_per_client=(engine_cfg.pool_tokens_per_client
@@ -139,6 +164,8 @@ class ServingEngine:
                 n_redundant=(engine_cfg.n_redundant
                              if engine_cfg.mode == "eaas" else 0),
                 capacities=engine_cfg.server_capacities)
+        else:
+            self.pool = None
         self.model = build_model(
             cfg, num_servers=S if cfg.moe else 1,
             redundant_table=self.pool.redundant_table if self.pool else None)
@@ -188,16 +215,26 @@ class ServingEngine:
         self.clock = 0.0
         self.halted_until = -1
         self._last_decode_time = 0.01
+        # attention clients currently sharing the expert tier (the cluster
+        # sets this before each member step; 1.0 = standalone engine, and
+        # the virtual cost model is bit-identical to the pre-cluster one)
+        self.expert_contention = 1.0
+        # compute/surface the pool imbalance gauge each decode step; set
+        # below for a local controller, and by the Cluster on its member
+        # clients when the CLUSTER-level controller is active
+        self.track_imbalance = False
         # shared placement cooldown (rebalance commits + elastic scaling)
         self.last_placement_change = float("-inf")
         self.rebalancer: Optional[RebalanceController] = None
         if (engine_cfg.rebalance_interval > 0 and self.pool is not None
+                and not self._shared_pool
                 and engine_cfg.mode == "eaas"):
             self.rebalancer = RebalanceController(RebalanceConfig(
                 interval=engine_cfg.rebalance_interval,
                 chunk=engine_cfg.rebalance_chunk,
                 min_gain=engine_cfg.rebalance_min_gain,
                 cooldown=engine_cfg.rebalance_cooldown))
+        self.track_imbalance = self.rebalancer is not None
 
     # ------------------------------------------------- back-compat surface
     @property
@@ -225,6 +262,38 @@ class ServingEngine:
 
     def _pool_size(self) -> int:
         return self.pool.num_servers if self.pool else 1
+
+    # --------------------------------------------------- front-end signals
+    def pending_prefill_tokens(self) -> int:
+        """Unprefilled prompt tokens (queued + mid-chunk) — the autoscaler
+        and the least-loaded front-end policy read this."""
+        return self.scheduler.pending_prefill_tokens()
+
+    def kv_free_fraction(self) -> float:
+        return self.scheduler.kv_free_fraction()
+
+    def free_kv_tokens(self) -> int:
+        """Token capacity this client can still admit into: free pool
+        blocks (paged) or free slots × max_seq (dense) — the memory half of
+        the least-loaded routing score."""
+        if self.kv_pool is not None:
+            return self.kv_pool.available() * self.kv_pool.block_size
+        free_slots = sum(1 for s in self.slots if s is None)
+        return free_slots * self.ecfg.max_seq
+
+    def abort_inflight(self) -> list:
+        """Drop every queued and in-flight request (client failure): slots
+        and KV blocks are released, nothing is re-queued.  Returns the
+        stranded requests — the cluster counts them as failed.  The expert
+        tier is untouched; sibling clients keep serving."""
+        stranded = list(self.scheduler.queue)
+        self.scheduler.queue.clear()
+        for b, r in enumerate(self.scheduler.slots):
+            if r is not None:
+                stranded.append(r)
+                self.scheduler.release(b)
+        self.executor._staging.clear()
+        return stranded
 
     # ------------------------------------------------------------- control
     def submit(self, req: Request) -> None:
@@ -256,6 +325,19 @@ class ServingEngine:
         if self.pool and rank < self.pool.num_servers:
             self.pool.server_recovered(rank)
 
+    def apply_migration(self, copies) -> None:
+        """Apply one expert-weight migration chunk to this engine's
+        executor.  A :class:`~repro.serving.cluster.Cluster` overrides the
+        *host* side of this call to fan the same copies out to every
+        client's executor — replica weights never diverge across clients."""
+        self.executor.migrate_slots(copies)
+
+    def charge_migration(self, dt: float) -> None:
+        """Advance the engine clock by a migration chunk's cost.  The
+        cluster version charges every client — the shared expert tier is
+        busy copying weights, so everyone's next expert phase waits."""
+        self.clock += dt
+
     def rebalance(self) -> None:
         """One-shot EPLB replica re-planning from live traffic (paper
         §4.5) — the scripted/manual path.  Placement-identical plans are
@@ -268,34 +350,14 @@ class ServingEngine:
         """
         if self.pool is None:
             return
+        if self._shared_pool:
+            raise RuntimeError(
+                "this engine is a cluster client over a shared expert "
+                "tier — call Cluster.rebalance() so every client's "
+                "executor migrates in lockstep")
         if self.rebalancer is not None:
             self.rebalancer.abort()      # the one-shot replan supersedes it
-        pool = self.pool
-        mapping, red = pool.plan()
-        changed = (load_balance.plan_digest(mapping, pool.num_servers)
-                   != pool.plan_digest)
-        if changed:
-            aligned, updates = load_balance.migration_updates(
-                pool.redundant_table, red)
-            E = pool.cfg.moe.num_experts
-            copies = [(s, expert_server.redundant_slot(
-                           E, pool.num_servers, j), new_e)
-                      for s, j, _, new_e in updates if new_e >= 0]
-            self.clk.start()
-            if copies:
-                self.executor.migrate_slots(copies)
-            dt = self.clk.stop("migrate", tokens=len(copies),
-                               servers=pool.num_servers)
-            self.clock += dt
-            pool.apply_plan(mapping, aligned)
-            self.metrics.rebalances += 1
-            self.metrics.migrated_experts += len(copies)
-            self.metrics.migration_time += dt
-            self.last_placement_change = self.clock
-        else:
-            self.metrics.rebalance_noops += 1
-        self.metrics.events.append(
-            {"t": self.clock, "event": "rebalance", "changed": changed})
+        oneshot_rebalance(self)
 
     def set_skew(self, bias: np.ndarray) -> None:
         """Install a router-logit bias (scenario ``set_skew`` traffic
@@ -320,6 +382,11 @@ class ServingEngine:
         """
         if self.pool is None or n == self.pool.num_servers:
             return
+        if self._shared_pool:
+            raise RuntimeError(
+                "this engine is a cluster client over a shared expert "
+                "tier — call Cluster.scale_to() so every client's "
+                "executor re-shards in lockstep")
         old = self.pool.num_servers
         if self.rebalancer is not None:
             self.rebalancer.abort()      # a resize replans placement anyway
@@ -360,20 +427,26 @@ class ServingEngine:
         chunk = (plan.tokens if plan.tokens is not None
                  else req.prompt[plan.start:plan.start + plan.length])
         self.clk.start()
+        expert_load = None
         if self.kv_pool is not None:
             # paged: every prefill runs the chunk path against the block
             # pool (prefix hits start mid-prompt; the virtual clock is
             # charged only the uncached tokens in ``plan.length``)
             self.executor.copy_blocks(plan.copies)     # pending COW forks
-            logits = self.executor.prefill_chunk_paged(
+            logits, expert_load = self.executor.prefill_chunk_paged(
                 chunk, plan.start, self.scheduler.block_tables[b])
         elif plan.is_first and plan.is_last:
             # whole prompt in one step — the pre-split prefill path
             logits = self.executor.prefill(b, chunk)
         else:
-            logits = self.executor.prefill_chunk(
+            logits, expert_load = self.executor.prefill_chunk(
                 b, chunk, plan.start,
                 is_first=plan.is_first, is_last=plan.is_last)
+        if (expert_load is not None and self.pool is not None
+                and self.ecfg.prefill_load_feedback):
+            # chunked-prefill router traffic feeds the same EMA decode
+            # feeds — prompt-heavy workloads rebalance from prompt traffic
+            self.pool.observe_load(np.asarray(expert_load))
         self.clock += self.clk.stop("prefill", result=logits,
                                     tokens=plan.length,
                                     servers=self._pool_size(),
@@ -420,7 +493,7 @@ class ServingEngine:
             # the gauge itself is only computed when something consumes it
             # (cost model or controller) — it walks the mapping in Python
             self.pool.observe_load(np.asarray(expert_load))
-            if self.ecfg.charge_imbalance or self.rebalancer is not None:
+            if self.ecfg.charge_imbalance or self.track_imbalance:
                 imbalance = self.pool.current_imbalance()
                 self.metrics.observe_balance(imbalance)
         dt = self.clk.stop("decode", result=logits, tokens=len(active),
@@ -429,7 +502,8 @@ class ServingEngine:
                            overlap=(self.ecfg.decode_mode == "pipelined"),
                            imbalance=(imbalance
                                       if self.ecfg.charge_imbalance
-                                      else 1.0))
+                                      else 1.0),
+                           contention=self.expert_contention)
         self._last_decode_time = dt
         self.clock += dt
         next_tokens = np.asarray(sample_batch(logits, temps,

@@ -116,9 +116,10 @@ class Executor:
         def ctx_of(rt_arrays):
             rt = None
             if rt0 is not None:
-                mapping, alive, local, route_bias = rt_arrays
+                mapping, alive, local, route_bias, rweights = rt_arrays
                 rt = rt0._replace(mapping=mapping, alive=alive,
-                                  local_table=local, route_bias=route_bias)
+                                  local_table=local, route_bias=route_bias,
+                                  replica_weights=rweights)
             return ParallelCtx(moe_runtime=rt, gemm_impl=gemm_impl,
                                remat=False)
 
@@ -148,8 +149,11 @@ class Executor:
         self._jit_chunk = None
         if model.prefill_chunk is not None:
             def chunk_fn(params, tokens, cache, start, rt_arrays):
-                return model.prefill_chunk(params, tokens, cache, start,
-                                           ctx_of(rt_arrays))
+                logits, cache, st = model.prefill_chunk(
+                    params, tokens, cache, start, ctx_of(rt_arrays))
+                # chunked prefill feeds the traffic EMA like decode does —
+                # the prompt-heavy-workload rebalance signal
+                return logits, cache, st.expert_load
             self._jit_chunk = jax.jit(chunk_fn)
 
         if self.kv_mode == "paged":
@@ -165,8 +169,9 @@ class Executor:
             def paged_chunk_fn(params, tokens, cache, row, start, rt_arrays):
                 view = _with_tables(cache, row[None],
                                     jnp.broadcast_to(start, (1,)))
-                return model.prefill_chunk(params, tokens, view, start,
-                                           ctx_of(rt_arrays))
+                logits, view, st = model.prefill_chunk(
+                    params, tokens, view, start, ctx_of(rt_arrays))
+                return logits, view, st.expert_load
 
             def copy_fn(cache, src, dst):
                 return {k: kvc.copy_blocks(st, src, dst, stacked=True)
@@ -180,7 +185,8 @@ class Executor:
         if self.pool is None:
             return ()
         rt = self.pool.runtime(self.gemm_impl)
-        return (rt.mapping, rt.alive, rt.local_table, rt.route_bias)
+        return (rt.mapping, rt.alive, rt.local_table, rt.route_bias,
+                rt.replica_weights)
 
     # ------------------------------------------------------------ prefill
     def prefill(self, slot: int, prompt: np.ndarray) -> jax.Array:
@@ -194,8 +200,11 @@ class Executor:
         return logits
 
     def prefill_chunk(self, slot: int, chunk: np.ndarray, start: int,
-                      *, is_first: bool, is_last: bool) -> jax.Array:
-        """One chunked-prefill continuation step for ``slot``.
+                      *, is_first: bool, is_last: bool
+                      ) -> Tuple[jax.Array, np.ndarray]:
+        """One chunked-prefill continuation step for ``slot``; returns
+        ``(logits, expert_load)`` — the chunk's router traffic feeds the
+        same EMA decode steps do.
 
         Chunks accumulate in a batch-1 staging cache; the final chunk
         commits the staging cache into the batch cache slot.
@@ -204,7 +213,7 @@ class Executor:
         if is_first:
             self._staging[slot] = self.model.init_cache(1, self.max_seq)
         tokens = jnp.asarray(chunk, jnp.int32)[None]
-        logits, staging = self._jit_chunk(
+        logits, staging, expert_load = self._jit_chunk(
             self.params, tokens, self._staging[slot],
             jnp.asarray(start, jnp.int32), self._rt_arrays())
         self._staging[slot] = staging
@@ -212,7 +221,7 @@ class Executor:
             self.cache = jax.tree.map(
                 lambda big, one: _slot_write(big, one, slot),
                 self.cache, self._staging.pop(slot))
-        return logits
+        return logits, expert_load
 
     # ------------------------------------------------------------- decode
     def decode(self, tokens: np.ndarray) -> Tuple[jax.Array, np.ndarray]:
@@ -223,19 +232,21 @@ class Executor:
 
     # -------------------------------------------------------------- paged
     def prefill_chunk_paged(self, chunk: np.ndarray, start: int,
-                            table_row: np.ndarray) -> jax.Array:
+                            table_row: np.ndarray
+                            ) -> Tuple[jax.Array, np.ndarray]:
         """One (chunked or whole-suffix) prefill step through the block
-        table.  The pool blocks are the real storage — no staging cache —
-        so a prefix-cache hit simply starts ``start`` past the cached
-        prefix and the chunk attends over blocks an earlier request wrote.
+        table; returns ``(logits, expert_load)``.  The pool blocks are the
+        real storage — no staging cache — so a prefix-cache hit simply
+        starts ``start`` past the cached prefix and the chunk attends over
+        blocks an earlier request wrote.
         """
         tokens = jnp.asarray(chunk, jnp.int32)[None]
-        logits, view = self._jit_paged_chunk(
+        logits, view, expert_load = self._jit_paged_chunk(
             self.params, tokens, self.cache,
             jnp.asarray(table_row, jnp.int32),
             jnp.asarray(start, jnp.int32), self._rt_arrays())
         self.cache = _adopt_pools(self.cache, view)
-        return logits
+        return logits, expert_load
 
     def decode_paged(self, tokens: np.ndarray, tables: np.ndarray,
                      lengths: np.ndarray) -> Tuple[jax.Array, np.ndarray]:

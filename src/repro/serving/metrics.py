@@ -77,16 +77,7 @@ class ServingMetrics:
 
         This is the paper's Fig. 10 fault curve — the per-interval dip under
         failures — computed from the step timeline."""
-        if not self.timeline:
-            return []
-        t_end = self.timeline[-1]["t"]
-        n_bins = max(1, int(np.ceil(t_end / bin_width)))
-        toks = np.zeros(n_bins)
-        for entry in self.timeline:
-            b = min(int(entry["t"] / bin_width), n_bins - 1)
-            toks[b] += entry["tokens"]
-        return [((b + 0.5) * bin_width, float(toks[b] / bin_width))
-                for b in range(n_bins)]
+        return _throughput_curve(self.timeline, bin_width)
 
     def fingerprint(self, ndigits: int = 9) -> str:
         """Content hash of the full run timeline (times rounded to
@@ -167,3 +158,163 @@ def _latency_stats(xs: List[float]) -> Dict[str, float]:
             "p50": float(np.percentile(a, 50)),
             "p99": float(np.percentile(a, 99)),
             "max": float(a.max())}
+
+
+def _throughput_curve(timeline: List[Dict],
+                      bin_width: float) -> List[Tuple[float, float]]:
+    if not timeline:
+        return []
+    t_end = max(entry["t"] for entry in timeline)
+    n_bins = max(1, int(np.ceil(t_end / bin_width)))
+    toks = np.zeros(n_bins)
+    for entry in timeline:
+        b = min(int(entry["t"] / bin_width), n_bins - 1)
+        toks[b] += entry["tokens"]
+    return [((b + 0.5) * bin_width, float(toks[b] / bin_width))
+            for b in range(n_bins)]
+
+
+@dataclass
+class ClusterMetrics:
+    """The cluster timeline: N clients' :class:`ServingMetrics` plus
+    cluster-level state (front-end routing, client failures, shared
+    expert-tier placement changes).
+
+    Every aggregate is derived from the per-client meters on read, so a
+    client's own fingerprint stays exactly what it would be standalone —
+    the cluster fingerprint wraps the per-client fingerprints plus the
+    routing/failure record.
+    """
+
+    per_client: List[ServingMetrics] = field(default_factory=list)
+    events: List[Dict] = field(default_factory=list)   # cluster-level only
+    wall_time: float = 0.0
+    failed_requests: int = 0                # stranded by client failures
+    # of failed_requests, those shed from the INGRESS queue when the last
+    # alive client died (they were never routed, so no client counted
+    # them — total_requests adds them back to keep completed == total -
+    # failed)
+    ingress_failed: int = 0
+    routed: List[int] = field(default_factory=list)    # requests per client
+    # shared-tier placement counters (the cluster-level RebalanceController
+    # writes these — same contract as the ServingMetrics fields)
+    rebalances: int = 0
+    rebalance_noops: int = 0
+    migrated_experts: int = 0
+    migration_time: float = 0.0
+
+    # ------------------------------------------------------- aggregates
+    @property
+    def total_requests(self) -> int:
+        return sum(c.total_requests for c in self.per_client) \
+            + self.ingress_failed
+
+    @property
+    def completed(self) -> int:
+        return sum(c.completed for c in self.per_client)
+
+    @property
+    def total_output_tokens(self) -> int:
+        return sum(c.total_output_tokens for c in self.per_client)
+
+    @property
+    def decode_throughput(self) -> float:
+        return self.total_output_tokens / max(self.wall_time, 1e-9)
+
+    @property
+    def ttfts(self) -> List[float]:
+        return [t for c in self.per_client for t in c.ttfts]
+
+    @property
+    def itls(self) -> List[float]:
+        return [t for c in self.per_client for t in c.itls]
+
+    @property
+    def preemptions(self) -> int:
+        return sum(c.preemptions for c in self.per_client)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        hits = sum(c.prefix_hit_blocks for c in self.per_client)
+        probes = sum(c.prefix_lookup_blocks for c in self.per_client)
+        return hits / max(probes, 1)
+
+    @property
+    def peak_expert_imbalance(self) -> float:
+        return max([c.peak_expert_imbalance for c in self.per_client],
+                   default=1.0)
+
+    def merged_timeline(self) -> List[Dict]:
+        """All clients' step timelines merged on absolute time (stable:
+        ties keep client order) — the cluster throughput record."""
+        merged = [dict(entry, client=i)
+                  for i, c in enumerate(self.per_client)
+                  for entry in c.timeline]
+        merged.sort(key=lambda e: e["t"])
+        return merged
+
+    def throughput_curve(self, bin_width: float) -> List[Tuple[float, float]]:
+        return _throughput_curve(self.merged_timeline(), bin_width)
+
+    def itl_stats(self) -> Dict[str, float]:
+        return _latency_stats(self.itls)
+
+    def ttft_stats(self) -> Dict[str, float]:
+        return _latency_stats(self.ttfts)
+
+    def fingerprint(self, ndigits: int = 9) -> str:
+        """Cluster determinism contract: per-client fingerprints (each one
+        already hashes that client's full timeline) plus the routing and
+        failure record.  Two runs of one seeded scenario against the same
+        cluster shape must match bit-for-bit."""
+        payload = {
+            "clients": [c.fingerprint(ndigits) for c in self.per_client],
+            "events": [{k: (round(v, ndigits) if isinstance(v, float)
+                            else v) for k, v in sorted(e.items())}
+                       for e in self.events],
+            "routed": list(self.routed),
+            "failed": self.failed_requests,
+            "ingress_failed": self.ingress_failed,
+            "wall": round(self.wall_time, ndigits),
+            "balance": [self.rebalances, self.rebalance_noops,
+                        self.migrated_experts,
+                        round(self.migration_time, ndigits)],
+        }
+        blob = json.dumps(payload, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()
+
+    def summary(self) -> Dict:
+        out = {
+            "clients": len(self.per_client),
+            "requests": self.total_requests,
+            "completed": self.completed,
+            "failed": self.failed_requests,
+            "output_tokens": self.total_output_tokens,
+            "wall_time_s": round(self.wall_time, 3),
+            "decode_tok_per_s": round(self.decode_throughput, 2),
+            "itl": {k: round(v * 1e3, 3)
+                    for k, v in self.itl_stats().items()},
+            "ttft": {k: round(v * 1e3, 3)
+                     for k, v in self.ttft_stats().items()},
+            "routed_per_client": list(self.routed),
+            "per_client": [
+                {"requests": c.total_requests, "completed": c.completed,
+                 "output_tokens": c.total_output_tokens}
+                for c in self.per_client],
+        }
+        if self.rebalances or self.migrated_experts:
+            out["balance"] = {
+                "rebalances": self.rebalances,
+                "rebalance_noops": self.rebalance_noops,
+                "migrated_experts": self.migrated_experts,
+                "migration_time_s": round(self.migration_time, 4),
+                "peak_expert_imbalance": round(self.peak_expert_imbalance,
+                                               4),
+            }
+        probes = sum(c.prefix_lookup_blocks for c in self.per_client)
+        if probes:
+            out["kv"] = {
+                "prefix_hit_rate": round(self.prefix_hit_rate, 4),
+                "preemptions": self.preemptions,
+            }
+        return out

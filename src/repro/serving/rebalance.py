@@ -29,6 +29,14 @@ Coordination with the :class:`~repro.serving.autoscale.Autoscaler`
 the engine's ``last_placement_change`` cooldown, the autoscaler holds off
 while a migration is in flight, and ``engine.scale_to`` aborts any pending
 migration (a resize re-plans placement wholesale anyway).
+
+The controller drives a narrow *host* interface — ``pool``, ``clk``,
+``clock``, ``metrics``, ``apply_migration(copies)``,
+``charge_migration(dt)``, ``last_placement_change`` — implemented by both
+:class:`~repro.serving.engine.ServingEngine` (one executor) and
+:class:`~repro.serving.cluster.Cluster` (the same weight copies fanned out
+to every client's executor, so replicas never diverge across the
+front-end).
 """
 
 from __future__ import annotations
@@ -38,6 +46,37 @@ from typing import List, Optional, Tuple
 
 from repro.core import load_balance
 from repro.core.expert_server import redundant_slot
+
+
+def oneshot_rebalance(host) -> None:
+    """Re-plan from the traffic EMA and migrate in ONE step (the scripted
+    ``rebalance`` scenario event / manual path).  ``host`` is an engine or
+    a cluster — see the module docstring for the interface."""
+    pool = host.pool
+    mapping, red = pool.plan()
+    changed = (load_balance.plan_digest(mapping, pool.num_servers)
+               != pool.plan_digest)
+    if changed:
+        aligned, updates = load_balance.migration_updates(
+            pool.redundant_table, red)
+        E = pool.cfg.moe.num_experts
+        copies = [(s, redundant_slot(E, pool.num_servers, j), new_e)
+                  for s, j, _, new_e in updates if new_e >= 0]
+        host.clk.start()
+        if copies:
+            host.apply_migration(copies)
+        dt = host.clk.stop("migrate", tokens=len(copies),
+                           servers=pool.num_servers)
+        host.charge_migration(dt)
+        pool.apply_plan(mapping, aligned)
+        host.metrics.rebalances += 1
+        host.metrics.migrated_experts += len(copies)
+        host.metrics.migration_time += dt
+        host.last_placement_change = host.clock
+    else:
+        host.metrics.rebalance_noops += 1
+    host.metrics.events.append(
+        {"t": host.clock, "event": "rebalance", "changed": changed})
 
 
 @dataclass
@@ -138,15 +177,16 @@ class RebalanceController:
                 pool.smap.drop_replica(old_e, s)
 
         # move: copy the incoming experts' weights into the freed slots
+        # (a cluster host fans the copies out to every client's executor)
         E = pool.cfg.moe.num_experts
         copies = [(s, redundant_slot(E, pool.num_servers, j), new_e)
                   for s, j, _, new_e in updates if new_e >= 0]
         engine.clk.start()
         if copies:
-            engine.executor.migrate_slots(copies)
+            engine.apply_migration(copies)
         dt = engine.clk.stop("migrate", tokens=len(copies),
                              servers=pool.num_servers)
-        engine.clock += dt
+        engine.charge_migration(dt)
         engine.metrics.migration_time += dt
         engine.metrics.migrated_experts += len(copies)
 

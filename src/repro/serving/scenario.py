@@ -11,15 +11,18 @@ produce bit-identical metrics.
 
 DSL (builder style, times are engine-clock seconds)::
 
-    sc = (Scenario(horizon=2.0, seed=0, max_new=16)
+    sc = (Scenario(horizon=2.0, seed=0, max_new=16, clients=4)
           .poisson(rate=40)                 # or .bursty(...) / .diurnal(...)
           .set_rate(t=1.0, rate=10)         # piecewise-constant override
-          .fail(rank=1, t=0.5)
+          .fail(rank=1, t=0.5)              # expert-server failure
           .recover(rank=1, t=0.9)
+          .fail_client(i=0, t=0.6)          # attention-client failure
+          .recover_client(i=0, t=1.1)       #   (Cluster engines only)
+          .set_frontend_policy(t=1.0, policy="least_loaded")
           .rebalance(t=1.2)
           .scale_to(n=2, t=1.5)             # or .autoscale(Autoscaler(...))
           )
-    result = sc.run(engine)
+    result = sc.run(engine)                 # engine OR Cluster
 
 Arrival processes are inhomogeneous Poisson, sampled by Lewis–Shedler
 thinning from a seeded generator — the trace depends only on
@@ -113,8 +116,10 @@ def sample_arrival_times(rate_fn: RateFn, horizon: float,
 @dataclass(frozen=True)
 class ScenarioEvent:
     t: float
-    kind: str        # fail | recover | rebalance | scale_to | set_policy
-    value: Optional[object] = None     # rank / pool size / policy name
+    # fail | recover | rebalance | scale_to | set_policy | set_skew |
+    # fail_client | recover_client | set_frontend_policy
+    kind: str
+    value: Optional[object] = None     # rank / client / pool size / policy
 
 
 @dataclass
@@ -133,15 +138,24 @@ class ScenarioResult:
 
 
 class Scenario:
-    """A scripted, seeded timeline of traffic + faults + scaling."""
+    """A scripted, seeded timeline of traffic + faults + scaling.
+
+    ``clients`` declares the cluster shape the timeline is written for
+    (how many attention clients share the expert tier); it is carried as
+    trace metadata — benchmark drivers build a
+    :class:`~repro.serving.cluster.Cluster` of that width — and validated
+    against the engine the timeline replays on when client-level events
+    (``fail_client`` / ``recover_client`` / ``set_frontend_policy``) are
+    present."""
 
     def __init__(self, horizon: float, seed: int = 0, prompt_len: int = 8,
-                 max_new: int = 16, vocab: int = 512):
+                 max_new: int = 16, vocab: int = 512, clients: int = 1):
         self.horizon = float(horizon)
         self.seed = seed
         self.prompt_len = prompt_len
         self.max_new = max_new
         self.vocab = vocab
+        self.clients = int(clients)
         self.events: List[ScenarioEvent] = []
         self._base_rate: RateFn = constant_rate(0.0)
         self._rate_overrides: List[Tuple[float, float]] = []  # set_rate pts
@@ -197,6 +211,26 @@ class Scenario:
         """Switch the engine's scheduling policy mid-run (e.g. flip to
         ``fair`` when a burst of long prompts is about to land)."""
         self.events.append(ScenarioEvent(float(t), "set_policy", policy))
+        return self
+
+    # ------------------------------------------------- cluster-level events
+    def fail_client(self, i: int, t: float) -> "Scenario":
+        """An ATTENTION client (not an expert server) dies at ``t``: its
+        in-flight requests strand while the shared expert tier keeps
+        serving every other client — the cluster half of the paper's
+        partial-rank-failure story."""
+        self.events.append(ScenarioEvent(float(t), "fail_client", int(i)))
+        return self
+
+    def recover_client(self, i: int, t: float) -> "Scenario":
+        self.events.append(ScenarioEvent(float(t), "recover_client", int(i)))
+        return self
+
+    def set_frontend_policy(self, t: float, policy: str) -> "Scenario":
+        """Swap the cluster's request-routing policy mid-run (e.g. flip to
+        ``session_affinity`` when shared-prefix traffic starts)."""
+        self.events.append(
+            ScenarioEvent(float(t), "set_frontend_policy", policy))
         return self
 
     # ---------------------------------------------------------- skew events
@@ -330,6 +364,14 @@ class Scenario:
             engine.scale_to(ev.value)
         elif ev.kind == "set_policy":
             engine.set_policy(ev.value)
+        elif ev.kind in ("fail_client", "recover_client",
+                         "set_frontend_policy"):
+            if not hasattr(engine, "fail_client"):
+                raise ValueError(
+                    f"scenario event {ev.kind!r} needs a Cluster engine "
+                    "(N attention clients); got a single-client engine — "
+                    "wrap it in repro.serving.Cluster")
+            getattr(engine, ev.kind)(ev.value)
         elif ev.kind == "set_skew":
             if engine.cfg.moe is None:
                 return

@@ -1,0 +1,385 @@
+"""Cluster front-end battery: N attention clients over one expert tier.
+
+Everything runs under the virtual clock — deterministic, no wall time:
+
+* **scale-out identity**: one seeded trace replayed at N=1 and N=4 clients
+  produces bitwise-identical per-request token streams (the front-end
+  changes *where* a request runs, never *what* it computes);
+* **determinism**: same seed ⇒ identical ClusterMetrics fingerprint;
+* **client fault containment**: killing one of 4 clients strands only its
+  in-flight requests, and the cluster throughput dip is strictly smaller
+  than the monolithic single-engine stall on the same trace;
+* **session affinity**: shared-prefix traffic routed by prefix hash beats
+  round_robin's prefix-cache hit rate;
+* **shared tier consistency**: cluster-level rebalancing migrates every
+  client's expert weights in lockstep; expert-server failures are observed
+  by all clients through the one shared mapping;
+* router policy units, admission backpressure, the Engine deprecation
+  shim, and the cluster-member guard rails.
+"""
+
+import numpy as np
+import pytest
+
+import repro.serving as serving
+from repro.configs import get_config
+from repro.serving import (Cluster, ClusterConfig, EngineConfig, Scenario,
+                           ServingEngine, VirtualClock)
+from repro.serving.frontend import (LeastLoaded, RoundRobin,
+                                    SessionAffinity, make_frontend_router)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("deepseek-r1").reduced()
+
+
+def _ecfg(**kw):
+    kw.setdefault("mode", "eaas")
+    kw.setdefault("num_servers", 4)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("n_redundant", 2)
+    # drop-free dispatch: the identity pins require placement/routing to
+    # never change which tokens reach their experts
+    kw.setdefault("pool_tokens_per_client", 16)
+    return EngineConfig(**kw)
+
+
+def _cluster(cfg, n, policy="round_robin", max_client_queue=0,
+             charge_contention=False, **ekw):
+    return Cluster(cfg, ClusterConfig(clients=n, frontend_policy=policy,
+                                      max_client_queue=max_client_queue,
+                                      charge_contention=charge_contention,
+                                      engine=_ecfg(**ekw)),
+                   seed=0, clock_factory=VirtualClock)
+
+
+def _trace(cfg, horizon=0.15, rate=100, max_new=6, seed=7, clients=1):
+    return Scenario(horizon=horizon, seed=seed, max_new=max_new,
+                    vocab=cfg.vocab_size, clients=clients).poisson(rate)
+
+
+def _tokens(res):
+    return {r.request_id: tuple(r.output_tokens) for r in res.requests}
+
+
+# --------------------------------------------------------------- identity
+
+def test_n1_vs_n4_bitwise_token_identity(cfg):
+    """The acceptance pin: 4 clients on a seeded trace produce the same
+    per-request token stream as 1 client, bit for bit."""
+    res1 = _trace(cfg, clients=1).run(_cluster(cfg, 1))
+    res4 = _trace(cfg, clients=4).run(_cluster(cfg, 4))
+    t1, t4 = _tokens(res1), _tokens(res4)
+    assert t1 == t4
+    assert res1.metrics.completed == res1.metrics.total_requests > 0
+    assert res4.metrics.completed == res4.metrics.total_requests
+
+
+def test_cluster_run_deterministic(cfg):
+    def one():
+        cl = _cluster(cfg, 3)
+        res = _trace(cfg, clients=3).run(cl)
+        return cl.metrics.fingerprint(), _tokens(res)
+
+    f1, t1 = one()
+    f2, t2 = one()
+    assert f1 == f2
+    assert t1 == t2
+
+
+def test_contention_charges_time_not_tokens(cfg):
+    """The shared-tier contention charge stretches the timeline but never
+    touches what is computed."""
+    plain = _trace(cfg, clients=2).run(_cluster(cfg, 2))
+    charged = _trace(cfg, clients=2).run(
+        _cluster(cfg, 2, charge_contention=True))
+    assert _tokens(plain) == _tokens(charged)
+    assert charged.metrics.wall_time > plain.metrics.wall_time
+
+
+# ----------------------------------------------------------- fault model
+
+def test_client_failure_strands_only_inflight(cfg):
+    """A dead client's in-flight requests are lost; every request routed
+    to a surviving client completes; the expert tier never blinks."""
+    cl = _cluster(cfg, 4)
+    sc = (_trace(cfg, horizon=0.4, rate=250, max_new=16, clients=4)
+          .fail_client(i=0, t=0.2))
+    res = sc.run(cl)
+    m = cl.metrics
+    assert m.failed_requests > 0
+    assert m.completed == m.total_requests - m.failed_requests
+    # nothing halted anywhere: the failure is contained to client 0
+    assert all(not e.get("halted") for c in cl.clients
+               for e in c.metrics.timeline)
+    assert not cl.client_alive[0]
+    ev = [e for e in m.events if e["event"] == "client_fail"]
+    assert len(ev) == 1 and ev[0]["stranded"] == m.failed_requests
+    assert res.metrics is m
+
+
+def test_client_failure_dip_smaller_than_monolithic_stall(cfg):
+    """The acceptance ordering: cluster throughput dip under a client
+    failure < the monolithic whole-engine stall on the same trace."""
+    horizon, t_fail = 0.4, 0.2
+
+    def dip(metrics):
+        curve = metrics.throughput_curve(horizon / 10)
+        pre = [v for t, v in curve if 0.1 * horizon <= t < t_fail]
+        post = [v for t, v in curve if t_fail <= t < horizon]
+        return 1.0 - min(post) / max(np.mean(pre), 1e-9)
+
+    cl = _cluster(cfg, 4)
+    (_trace(cfg, horizon=horizon, rate=250, max_new=16, clients=4)
+     .fail_client(i=0, t=t_fail).recover_client(i=0, t=0.35)).run(cl)
+    d_cluster = dip(cl.metrics)
+
+    mono = ServingEngine(cfg, _ecfg(mode="monolithic_ep", restart_steps=50),
+                         seed=0, clock=VirtualClock())
+    _trace(cfg, horizon=horizon, rate=250, max_new=16).fail(
+        rank=1, t=t_fail).run(mono)
+    d_mono = dip(mono.metrics)
+
+    assert 0.0 < d_cluster < d_mono
+    # a quarter of the attention tier died; the dip is a capacity share,
+    # not a stall
+    assert d_cluster < 0.75 and d_mono > 0.9
+
+
+def test_total_client_loss_sheds_ingress_with_accounting(cfg):
+    """When the LAST client dies, ingress-held (never-routed) requests are
+    counted as failed too — completed == total - failed survives total
+    loss, and post-mortem submits fail fast instead of piling up."""
+    cl = _cluster(cfg, 2, max_client_queue=1)
+    for i in range(8):
+        cl.submit(serving.Request(
+            i, np.arange(8, dtype=np.int32),
+            serving.SamplingParams(max_new_tokens=4)))
+    cl._route_ingress()                      # 2 routed, 6 held in ingress
+    assert len(cl.ingress) == 6
+    cl.fail_client(0)
+    cl.fail_client(1)
+    m = cl.metrics
+    assert not cl.ingress
+    assert m.ingress_failed == 6
+    assert m.failed_requests == 8
+    assert m.completed == m.total_requests - m.failed_requests == 0
+    cl.submit(serving.Request(99, np.arange(8, dtype=np.int32),
+                              serving.SamplingParams(max_new_tokens=4)))
+    assert m.failed_requests == 9 and not cl.ingress
+    with pytest.raises(ValueError, match="no client"):
+        cl.fail_client(5)
+
+
+def test_recovered_client_serves_again(cfg):
+    cl = _cluster(cfg, 2)
+    sc = (_trace(cfg, horizon=0.3, rate=150, max_new=8, clients=2)
+          .fail_client(i=1, t=0.1).recover_client(i=1, t=0.15))
+    sc.run(cl)
+    assert cl.client_alive[1]
+    # client 1 received fresh work after recovery: routed > what it had
+    # completed+stranded at failure time
+    assert cl.metrics.routed[1] > 0
+    assert cl.clients[1].metrics.completed > 0
+
+
+# ------------------------------------------------------- session affinity
+
+def test_session_affinity_beats_round_robin_prefix_hits(cfg):
+    """Shared-prefix traffic: affinity pins each prefix to one home client
+    whose BlockPool caches it; round_robin smears every prefix cold over
+    every client."""
+    def run(policy):
+        cl = _cluster(cfg, 4, policy=policy, kv_mode="paged",
+                      kv_block_size=8, prefill_chunk=8)
+        sc = _trace(cfg, horizon=0.3, rate=120, max_new=6, clients=4) \
+            .shared_prefix(n_prefixes=3, prefix_len=16, suffix_len=8)
+        sc.run(cl)
+        return cl
+
+    aff = run("session_affinity")
+    rr = run("round_robin")
+    assert aff.metrics.prefix_hit_rate > rr.metrics.prefix_hit_rate
+    # affinity actually pinned: every request of one prefix went to the
+    # same client, so at most n_prefixes clients received traffic
+    assert sum(1 for n in aff.metrics.routed if n > 0) <= 3
+
+
+# ------------------------------------------------ shared tier consistency
+
+def test_rebalance_fans_out_to_every_client(cfg):
+    """Cluster-level rebalancing keeps every client's expert weights
+    bitwise identical — the shared tier has ONE placement."""
+    import dataclasses as dc
+    import jax
+
+    wide = cfg.replace(moe=dc.replace(cfg.moe, num_experts=16))
+    cl = Cluster(wide, ClusterConfig(clients=2, engine=_ecfg(
+        max_batch=8, pool_tokens_per_client=32,
+        rebalance_interval=0.02, charge_imbalance=True)),
+        seed=0, clock_factory=VirtualClock)
+    sc = (_trace(wide, horizon=0.4, rate=80, max_new=16, clients=2)
+          .zipf_skew(1.2, scale=1.0))
+    sc.run(cl)
+    assert cl.metrics.rebalances >= 1
+    assert cl.metrics.migrated_experts > 0
+    p0 = cl.clients[0].executor.params
+    p1 = cl.clients[1].executor.params
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), p0, p1)
+
+
+def test_expert_server_failure_observed_by_all_clients(cfg):
+    cl = _cluster(cfg, 3)
+    cl.inject_server_failure(1)
+    for eng in cl.clients:
+        assert not bool(eng.pool.smap.alive[1])
+    cl.recover_server(1)
+    for eng in cl.clients:
+        assert bool(eng.pool.smap.alive[1])
+
+
+def test_per_client_mask_is_local(cfg):
+    """One client masking a server it observed misbehaving does not change
+    what the siblings route to (the shared table is untouched)."""
+    cl = _cluster(cfg, 2)
+    view0 = cl.clients[0].pool
+    view0.mask_server(2)
+    assert not view0.runtime().alive[2]
+    assert cl.clients[1].pool.runtime().alive[2]
+    assert bool(cl.pool.smap.alive[2])          # shared liveness untouched
+    view0.unmask_server(2)
+    assert bool(view0.runtime().alive[2])
+
+
+def test_shared_ema_aggregates_all_clients(cfg):
+    """Every client's router traffic lands in the ONE pool EMA."""
+    cl = _cluster(cfg, 2)
+    _trace(cfg, clients=2).run(cl)
+    decode_steps = sum(
+        sum(1 for e in c.metrics.timeline
+            if not e.get("halted") and e["tokens"] > 0)
+        for c in cl.clients)
+    assert cl.pool.stats.updates >= decode_steps > 0
+
+
+# ------------------------------------------------------ admission control
+
+def test_backpressure_holds_ingress(cfg):
+    cl = _cluster(cfg, 2, max_client_queue=2)
+    for i in range(12):
+        cl.submit(serving.Request(
+            i, np.arange(8, dtype=np.int32),
+            serving.SamplingParams(max_new_tokens=4)))
+    cl._route_ingress()
+    # each client: 2 queued (cap); the rest wait in ingress
+    assert all(len(eng.queue) == 2 for eng in cl.clients)
+    assert len(cl.ingress) == 12 - 4
+    cl.run(max_steps=4000)
+    assert cl.metrics.completed == 12
+    assert not cl.ingress
+
+
+def test_set_frontend_policy_event(cfg):
+    cl = _cluster(cfg, 2)
+    sc = (_trace(cfg, horizon=0.2, rate=100, clients=2)
+          .set_frontend_policy(t=0.1, policy="least_loaded"))
+    sc.run(cl)
+    assert cl.router.name == "least_loaded"
+    assert any(e["event"] == "set_frontend_policy"
+               for e in cl.metrics.events)
+
+
+def test_client_event_needs_cluster(cfg):
+    eng = ServingEngine(cfg, _ecfg(), seed=0, clock=VirtualClock())
+    sc = _trace(cfg).fail_client(i=0, t=0.05)
+    with pytest.raises(ValueError, match="Cluster"):
+        sc.run(eng)
+
+
+# ----------------------------------------------------------- router units
+
+def test_round_robin_cycles_and_skips():
+    r = RoundRobin(4)
+    cands = [(0, None), (1, None), (2, None), (3, None)]
+    assert [r.pick(None, cands) for _ in range(5)] == [0, 1, 2, 3, 0]
+    r2 = RoundRobin(3)
+    assert [r2.pick(None, [(0, None), (2, None)]) for _ in range(4)] \
+        == [0, 2, 0, 2]
+
+
+def test_least_loaded_scores():
+    class Fake:
+        def __init__(self, backlog, free):
+            self._b, self._f = backlog, free
+
+        def pending_prefill_tokens(self):
+            return self._b
+
+        def free_kv_tokens(self):
+            return self._f
+
+    r = LeastLoaded(3)
+    cands = [(0, Fake(100, 10)), (1, Fake(0, 50)), (2, Fake(0, 50))]
+    assert r.pick(None, cands) == 1              # least loaded, tie -> low
+    cands = [(0, Fake(0, 500)), (1, Fake(0, 50))]
+    assert r.pick(None, cands) == 0              # most free memory
+
+
+def test_session_affinity_stable_home_and_fallback():
+    r = SessionAffinity(4, block_size=8)
+    p = np.arange(24, dtype=np.int32)
+    home = r.home(p)
+    assert home == r.home(p)                     # deterministic
+    # identical leading block, different suffix -> same home
+    q = np.concatenate([p[:8], np.full(16, 99, np.int32)])
+    assert r.home(q) == home
+
+    # home inadmissible -> deterministic fall-forward around the ring
+    cands = [(i, None) for i in range(4) if i != home]
+    assert r.pick(serving.Request(0, p), cands) == (home + 1) % 4
+    # home admissible -> home wins
+    assert r.pick(serving.Request(0, p), [(i, None) for i in range(4)]) \
+        == home
+
+
+def test_make_frontend_router_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown frontend policy"):
+        make_frontend_router("hash_ring", 4)
+
+
+# ------------------------------------------------------------ guard rails
+
+def test_cluster_member_engines_reject_local_placement_changes(cfg):
+    cl = _cluster(cfg, 2)
+    with pytest.raises(RuntimeError, match="cluster"):
+        cl.clients[0].scale_to(2)
+    with pytest.raises(RuntimeError, match="cluster"):
+        cl.clients[0].rebalance()
+
+
+def test_cluster_scale_to_resizes_every_executor(cfg):
+    cl = _cluster(cfg, 2)
+    _trace(cfg, clients=2).run(cl)
+    cl.scale_to(2)
+    assert cl.pool.num_servers == 2
+    for eng in cl.clients:
+        assert eng.pool.num_servers == 2
+        assert eng.executor._rt0.num_servers == 2
+
+
+def test_engine_deprecation_shim(cfg):
+    with pytest.warns(DeprecationWarning, match="Cluster"):
+        cls = serving.Engine
+    assert cls is ServingEngine
+    with pytest.raises(AttributeError):
+        serving.NoSuchThing
+
+
+def test_cluster_rejects_bad_shapes(cfg):
+    with pytest.raises(ValueError, match="at least one client"):
+        Cluster(cfg, ClusterConfig(clients=0, engine=_ecfg()))
+    with pytest.raises(ValueError, match="not disaggregated"):
+        Cluster(cfg, ClusterConfig(clients=2, engine=_ecfg(mode="tp")))

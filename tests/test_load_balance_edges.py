@@ -1,9 +1,12 @@
 """EPLB planner edge cases (hypothesis-free): replica demand exceeding the
-pool, heterogeneous server capacities, and plan determinism."""
+pool, heterogeneous server capacities (planner steering AND client-side
+capacity-weighted replica spreading), and plan determinism."""
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import load_balance
+from repro.core import mapping as emap
 from repro.core.expert_server import make_local_table
 
 
@@ -57,6 +60,71 @@ def test_heterogeneous_capacities_steer_replicas():
     # even though its *raw* load (its two busy primaries) is the highest
     assert flat_map[6, 1] == 1
     assert cap_map[6, 1] == 0
+
+
+def test_capacity_weighted_lookup_spreads_proportionally():
+    """ROADMAP item: on a heterogeneous pool, ``mapping.lookup`` spreads an
+    expert's tokens over its alive replicas proportionally to the planner
+    ``capacities``, not uniformly."""
+    table = np.full((1, 4), -1, np.int32)
+    table[0, :3] = [0, 1, 2]                  # replicas on servers 0,1,2
+    alive = jnp.ones(4, bool)
+    T = 4096                                   # one full salt lattice
+    eids = jnp.zeros((T, 1), jnp.int32)
+    salt = jnp.arange(T, dtype=jnp.int32)[:, None]
+    caps = jnp.asarray([4.0, 2.0, 1.0, 1.0])
+    sv = np.asarray(emap.lookup(jnp.asarray(table), alive, eids, salt,
+                                weights=caps)).ravel()
+    counts = np.bincount(sv, minlength=4).astype(float)
+    assert counts[3] == 0                      # not a replica
+    np.testing.assert_allclose(counts[:3] / counts[2], [4.0, 2.0, 1.0],
+                               rtol=0.02)
+    # uniform weights ≈ uniform spread (the homogeneous sanity check)
+    svu = np.asarray(emap.lookup(jnp.asarray(table), alive, eids, salt,
+                                 weights=jnp.ones(4))).ravel()
+    cu = np.bincount(svu, minlength=4).astype(float)
+    np.testing.assert_allclose(cu[:3], T / 3, rtol=0.05)
+    # weights=None stays bitwise the pre-capacity salt % count policy
+    sv_none = np.asarray(emap.lookup(jnp.asarray(table), alive, eids, salt))
+    expect = np.asarray(table[0, :3])[np.arange(T) % 3]
+    np.testing.assert_array_equal(sv_none.ravel(), expect)
+
+
+def test_capacity_weighted_lookup_renormalizes_over_dead():
+    """A dead replica's capacity share flows to the survivors pro rata."""
+    table = np.full((1, 4), -1, np.int32)
+    table[0, :3] = [0, 1, 2]
+    alive = jnp.asarray([True, False, True, True])
+    T = 4096
+    eids = jnp.zeros((T, 1), jnp.int32)
+    salt = jnp.arange(T, dtype=jnp.int32)[:, None]
+    caps = jnp.asarray([4.0, 2.0, 1.0, 1.0])
+    sv = np.asarray(emap.lookup(jnp.asarray(table), alive, eids, salt,
+                                weights=caps)).ravel()
+    counts = np.bincount(sv, minlength=4).astype(float)
+    assert counts[1] == 0                      # dead
+    np.testing.assert_allclose(counts[0] / counts[2], 4.0, rtol=0.02)
+
+
+def test_server_loads_capacity_proportional_spread():
+    """The expected-load model matches the weighted client policy: with
+    capacities, a replica set's load splits pro rata, and the normalized
+    imbalance of a proportional split is exactly 1."""
+    E, S = 4, 2
+    mapping = np.full((E, 2), -1, np.int32)
+    mapping[:, 0] = [0, 0, 1, 1]
+    mapping[0, 1] = 1                          # expert 0 replicated on both
+    load = np.array([6.0, 1.0, 1.0, 1.0])
+    caps = np.array([2.0, 1.0])
+    uniform = load_balance.server_loads(load, mapping, S)
+    weighted = load_balance.server_loads(load, mapping, S, capacities=caps)
+    np.testing.assert_allclose(uniform, [3.0 + 1.0, 3.0 + 2.0])
+    np.testing.assert_allclose(weighted, [4.0 + 1.0, 2.0 + 2.0])
+    # perfectly proportional placement -> capacity-normalized imbalance 1
+    flat = np.full((2, 1), -1, np.int32)
+    flat[:, 0] = [0, 1]
+    assert load_balance.imbalance(np.array([2.0, 1.0]), flat, 2,
+                                  capacities=caps) == 1.0
 
 
 def test_imbalance_respects_liveness():

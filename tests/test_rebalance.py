@@ -61,6 +61,40 @@ def skew_runs():
     return out
 
 
+# ------------------------------------------------------ prefill feedback
+
+def test_prompt_heavy_trace_triggers_rebalance_via_prefill_feedback():
+    """Chunked-prefill steps feed ``MoEStats.expert_load`` into the traffic
+    EMA (the ROADMAP item): a prompt-heavy skewed trace rebalances from
+    prompt traffic alone, and warms the EMA far faster than decode-only
+    feedback does."""
+    cfg = _cfg()
+
+    def run(feedback: bool):
+        ecfg = EngineConfig(
+            mode="eaas", num_servers=NUM_SERVERS, max_batch=MAX_BATCH,
+            max_seq=96, n_redundant=2, prefill_chunk=8,
+            pool_tokens_per_client=MAX_BATCH * NUM_SERVERS,
+            charge_imbalance=True, rebalance_interval=0.02,
+            prefill_load_feedback=feedback)
+        eng = ServingEngine(cfg, ecfg, seed=0, clock=VirtualClock(
+            decode_base=2e-4, decode_per_token=2e-3, expert_share=0.8))
+        # prompt-heavy: 48-token prompts, a single output token each --
+        # nearly all router traffic happens during prefill
+        sc = (Scenario(horizon=0.5, seed=7, prompt_len=48, max_new=1,
+                       vocab=cfg.vocab_size)
+              .poisson(rate=40).zipf_skew(alpha=1.2, scale=1.0))
+        sc.run(eng)
+        return eng
+
+    fed = run(True)
+    unfed = run(False)
+    assert fed.metrics.rebalances >= 1
+    assert fed.pool.stats.updates > 2 * unfed.pool.stats.updates
+    # and the fed run actually migrated replicas toward the hot experts
+    assert fed.metrics.migrated_experts > 0
+
+
 # ------------------------------------------------------------ scenario pins
 
 def test_rebalance_throughput_speedup(skew_runs):
