@@ -1,0 +1,193 @@
+"""Async expert tier benchmark: event-driven vs lockstep execution.
+
+One seeded request trace replayed under ``EngineConfig.exec_mode``
+``lockstep`` and ``async`` on an expert-dominated
+:class:`~repro.serving.clock.VirtualClock` cost model:
+
+* ``lockstep`` / ``async``          — the plain trace: the bitwise
+  token-identity contract (values never depend on execution mode) and the
+  ping-pong pipelining throughput edge (wave k+1's attention overlaps
+  wave k's expert phase instead of summing with it);
+* ``lockstep_straggler`` / ``async_straggler`` — the same trace with one
+  expert server running 6x slow: lockstep stretches EVERY decode step by
+  the slowest alive server, async queues only that server's micro-batches
+  — the p99 ITL gap is the paper's tail-latency claim, and the headline
+  gate (``async_p99_beats_lockstep_straggler``).
+
+The full (non-smoke) run adds a saturated bursty-trace pair and the
+``async_depth=1`` ablation (strict wave-at-a-time: identity holds and the
+cadence collapses back to lockstep — the pipelining win is depth >= 2).
+
+Deterministic under the virtual clock: every number in the JSON is exactly
+reproducible, so the ``gate`` section (consumed by ``tools/check_bench.py``
+against ``experiments/baselines/async_tier.json``) pins identity and the
+p99 win exactly and throughputs within tolerance.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+from typing import Dict, List
+
+from benchmarks.common import bench_model_cfg, csv_row, save_result
+from repro.serving import (EngineConfig, Scenario, ServingEngine,
+                           VirtualClock)
+
+NUM_SERVERS = 4
+MAX_BATCH = 4
+STRAGGLER_RANK = 1
+STRAGGLER_FACTOR = 6.0
+
+
+def _clock() -> VirtualClock:
+    # expert-dominated decode: the regime where the tier's queues (and a
+    # straggler server) actually gate the step
+    return VirtualClock(decode_base=2e-4, decode_per_token=2e-3,
+                        expert_share=0.8)
+
+
+def _engine(cfg, exec_mode: str, **kw) -> ServingEngine:
+    ecfg = EngineConfig(
+        mode="eaas", num_servers=NUM_SERVERS, max_batch=MAX_BATCH,
+        max_seq=64, n_redundant=2,
+        # drop-free dispatch capacity (the bitwise-identity contract)
+        pool_tokens_per_client=MAX_BATCH * NUM_SERVERS,
+        exec_mode=exec_mode, **kw)
+    return ServingEngine(cfg, ecfg, seed=0, clock=_clock())
+
+
+def _token_fingerprint(tokens: Dict[int, tuple]) -> str:
+    blob = repr(sorted(tokens.items())).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def _measure(eng: ServingEngine, sc: Scenario) -> Dict:
+    res = sc.run(eng)
+    m = res.metrics
+    tokens = {r.request_id: tuple(r.output_tokens) for r in res.requests}
+    out = {
+        "requests": m.total_requests,
+        "completed": m.completed,
+        "decode_tok_per_s": m.decode_throughput,
+        "p99_itl_s": m.p99_itl,
+        "wall_s": eng.clock,
+        "token_fingerprint": _token_fingerprint(tokens),
+        "_tokens": tokens,
+    }
+    if eng.tier is not None:
+        out["micro_batches"] = eng.tier.completed
+        out["queue_delay"] = m.queue_delay_stats()
+        out["fired_events"] = len(eng.timeline.log)
+    return out
+
+
+def run(horizon: float = 0.5, rate: float = 100.0, max_new: int = 12,
+        smoke: bool = False) -> Dict:
+    if smoke:
+        horizon, rate, max_new = 0.25, 100.0, 8
+    cfg = bench_model_cfg()
+    V = cfg.vocab_size
+
+    def plain():
+        return Scenario(horizon=horizon, seed=7, prompt_len=8,
+                        max_new=max_new, vocab=V).poisson(rate=rate)
+
+    def straggled():
+        return plain().slow_server(STRAGGLER_RANK, t=horizon / 20,
+                                   factor=STRAGGLER_FACTOR)
+
+    variants: Dict[str, Dict] = {}
+    variants["lockstep"] = _measure(_engine(cfg, "lockstep"), plain())
+    variants["async"] = _measure(_engine(cfg, "async"), plain())
+    variants["lockstep_straggler"] = _measure(_engine(cfg, "lockstep"),
+                                              straggled())
+    variants["async_straggler"] = _measure(_engine(cfg, "async"),
+                                           straggled())
+
+    if not smoke:
+        def bursty():
+            return (Scenario(horizon=horizon / 4, seed=11, prompt_len=8,
+                             max_new=max_new, vocab=V)
+                    .bursty(base=rate / 2, peak=6 * rate,
+                            period=horizon / 8, duty=0.3))
+        variants["lockstep_bursty"] = _measure(_engine(cfg, "lockstep"),
+                                               bursty())
+        variants["async_bursty"] = _measure(_engine(cfg, "async"),
+                                            bursty())
+        variants["async_depth1"] = _measure(
+            _engine(cfg, "async", async_depth=1), plain())
+
+    lk, an = variants["lockstep"], variants["async"]
+    lks, ans = variants["lockstep_straggler"], variants["async_straggler"]
+    out: Dict = {"figure": "async_tier", "smoke": smoke,
+                 "num_servers": NUM_SERVERS,
+                 "straggler": {"rank": STRAGGLER_RANK,
+                               "factor": STRAGGLER_FACTOR},
+                 "variants": {}}
+    out["tokens_identical_plain"] = lk["_tokens"] == an["_tokens"]
+    out["tokens_identical_straggler"] = lks["_tokens"] == ans["_tokens"]
+    out["async_speedup_plain"] = (an["decode_tok_per_s"]
+                                  / max(lk["decode_tok_per_s"], 1e-9))
+    out["straggler_p99_ratio"] = (ans["p99_itl_s"]
+                                  / max(lks["p99_itl_s"], 1e-12))
+    for name, v in variants.items():
+        out["variants"][name] = {k: val for k, val in v.items()
+                                 if k != "_tokens"}
+
+    out["gate"] = {
+        "exact": {
+            "smoke": smoke,
+            "tokens_identical_plain": out["tokens_identical_plain"],
+            "tokens_identical_straggler":
+                out["tokens_identical_straggler"],
+            "token_fingerprint_async": an["token_fingerprint"],
+            # the headline claims, pinned as booleans (the ratios below
+            # track the margins within tolerance)
+            "async_p99_beats_lockstep_straggler":
+                ans["p99_itl_s"] < lks["p99_itl_s"],
+            "async_throughput_not_worse":
+                an["decode_tok_per_s"] >= lk["decode_tok_per_s"],
+        },
+        "tolerance": {
+            "tok_per_s_lockstep": lk["decode_tok_per_s"],
+            "tok_per_s_async": an["decode_tok_per_s"],
+            "p99_itl_lockstep_straggler": lks["p99_itl_s"],
+            "p99_itl_async_straggler": ans["p99_itl_s"],
+            "straggler_p99_ratio": out["straggler_p99_ratio"],
+        },
+    }
+    save_result("async_tier", out)
+    return out
+
+
+def main() -> List[str]:
+    res = run()
+    rows = []
+    for name, v in res["variants"].items():
+        rows.append(csv_row(
+            f"async_tier_{name}", 0.0,
+            f"tok_per_s={v['decode_tok_per_s']:.1f}"
+            f";p99_itl={v['p99_itl_s']:.5f}"
+            f";completed={v['completed']}"))
+    rows.append(csv_row(
+        "async_tier_summary", 0.0,
+        f"speedup=x{res['async_speedup_plain']:.3f}"
+        f";straggler_p99_ratio={res['straggler_p99_ratio']:.3f}"
+        f";identical={int(res['tokens_identical_plain'])}"))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single short configuration (CI regression gate)")
+    args = ap.parse_args()
+    res = run(smoke=args.smoke)
+    for name, v in res["variants"].items():
+        print(f"{name}: tok_per_s={v['decode_tok_per_s']:.1f} "
+              f"p99_itl={v['p99_itl_s']:.5f} completed={v['completed']}")
+    print(f"async speedup x{res['async_speedup_plain']:.3f}, straggler "
+          f"p99 ratio {res['straggler_p99_ratio']:.3f} (identical="
+          f"{res['tokens_identical_plain']}/"
+          f"{res['tokens_identical_straggler']})")

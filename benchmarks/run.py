@@ -11,9 +11,10 @@ import traceback
 
 def main() -> None:
     fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
-    from benchmarks import (ablation, comm, expert_balance, fault_tolerance,
-                            frontend_routing, latency, overlap_ablation,
-                            paged_kv, roofline, scaling, throughput)
+    from benchmarks import (ablation, async_tier, comm, expert_balance,
+                            fault_tolerance, frontend_routing, latency,
+                            overlap_ablation, paged_kv, roofline, scaling,
+                            throughput)
 
     suites = [("fig12_comm", comm.main),
               ("fig13_ablation", ablation.main),
@@ -26,7 +27,8 @@ def main() -> None:
                   ("fig11_scaling", scaling.main),
                   ("paged_kv", paged_kv.main),
                   ("expert_balance", expert_balance.main),
-                  ("frontend_routing", frontend_routing.main)] + suites
+                  ("frontend_routing", frontend_routing.main),
+                  ("async_tier", async_tier.main)] + suites
 
     print("name,us_per_call,derived")
     failures = 0

@@ -16,7 +16,15 @@ paged block-pool caches and two-microbatch pipelined decode (``executor``),
 the per-client ``ServingEngine`` orchestrator, and the deterministic
 scenario/autoscaling harness the paper's timeline claims are tested with
 (now cluster-aware: ``fail_client`` / ``recover_client`` /
-``set_frontend_policy`` events).
+``set_frontend_policy`` events, plus ``slow_server`` stragglers).
+
+Execution modes: ``EngineConfig.exec_mode`` selects ``lockstep`` (default,
+synchronous steps) or ``async`` — the event-driven expert tier
+(``event_loop.AsyncExpertTier`` micro-batch queues + the
+``clock.EventTimeline`` discrete-event heap) where decode completions post
+back asynchronously and prefill overlaps in-flight expert phases.  Both
+modes produce bitwise-identical per-request token streams from the same
+seed; only timing moves.
 
 Deprecated: ``repro.serving.Engine`` (alias of ``ServingEngine``) — the
 pre-cluster name for "the system"; use ``Cluster`` (or ``ServingEngine``
@@ -32,7 +40,10 @@ from repro.serving.frontend import (FrontendRouter,  # noqa: F401
                                     FRONTEND_POLICIES, make_frontend_router)
 from repro.serving.kv_pool import BlockPool, block_hashes  # noqa: F401
 from repro.serving.request import Request, SamplingParams  # noqa: F401
-from repro.serving.clock import Clock, VirtualClock, WallClock  # noqa: F401
+from repro.serving.clock import (Clock, Event,  # noqa: F401
+                                 EventTimeline, VirtualClock, WallClock)
+from repro.serving.event_loop import (AsyncExpertTier,  # noqa: F401
+                                      MicroBatch, ServerQueue)
 from repro.serving.metrics import (ClusterMetrics,  # noqa: F401
                                    ServingMetrics)
 from repro.serving.scenario import (Scenario, ScenarioResult,  # noqa: F401

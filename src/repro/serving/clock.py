@@ -29,8 +29,12 @@ the paper's claims hinge on:
 
 from __future__ import annotations
 
+import hashlib
+import heapq
+import json
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
 
 
 class Clock:
@@ -42,7 +46,7 @@ class Clock:
     def stop(self, kind: str, *, result=None, tokens: int = 0,
              servers: int = 1, alive_frac: float = 1.0,
              overlap: bool = False, imbalance: float = 1.0,
-             contention: float = 1.0) -> float:
+             contention: float = 1.0, straggle: float = 1.0) -> float:
         """End the bracket opened by :meth:`start`.
 
         kind: "prefill" | "decode" | "migrate"; result: a jax array to
@@ -64,7 +68,11 @@ class Clock:
         stretches by it, exactly like imbalance, while the attention/client
         share is the client's own hardware and never contends.  1.0 (the
         default, and any single-engine run) reproduces the pre-cluster
-        model bit-exactly.
+        model bit-exactly; straggle: slowdown factor of the slowest alive
+        expert server (scenario ``slow_server`` events) — a lockstep
+        expert phase finishes with its slowest server, so the expert share
+        stretches by it exactly like imbalance/contention (1.0, the
+        default, is bit-identical to the pre-straggler model).
         """
         raise NotImplementedError
 
@@ -85,7 +93,7 @@ class WallClock(Clock):
     def stop(self, kind: str, *, result=None, tokens: int = 0,
              servers: int = 1, alive_frac: float = 1.0,
              overlap: bool = False, imbalance: float = 1.0,
-             contention: float = 1.0) -> float:
+             contention: float = 1.0, straggle: float = 1.0) -> float:
         if result is not None:
             result.block_until_ready()
         return time.perf_counter() - self._t0
@@ -127,7 +135,7 @@ class VirtualClock(Clock):
     def stop(self, kind: str, *, result=None, tokens: int = 0,
              servers: int = 1, alive_frac: float = 1.0,
              overlap: bool = False, imbalance: float = 1.0,
-             contention: float = 1.0) -> float:
+             contention: float = 1.0, straggle: float = 1.0) -> float:
         if kind == "migrate":
             # weight movement doesn't parallelize over the pool (each copy
             # lands on one server) and is unaffected by liveness
@@ -139,13 +147,16 @@ class VirtualClock(Clock):
             dt = self.prefill_base + self.prefill_per_token * work
         else:
             var = self.decode_per_token * work
-            if overlap or imbalance > 1.0 or contention > 1.0:
+            if overlap or imbalance > 1.0 or contention > 1.0 \
+                    or straggle > 1.0:
                 # the expert phase finishes with its hottest server: skew
-                # stretches the expert share by max/mean server load, and
-                # N front-end clients sharing the tier stretch it N-fold
-                # (their attention shares run on private hardware)
+                # stretches the expert share by max/mean server load, N
+                # front-end clients sharing the tier stretch it N-fold
+                # (their attention shares run on private hardware), and a
+                # straggler server stretches it by its slowdown factor —
+                # lockstep waits for the slowest server every step
                 expert = (self.expert_share * var * max(imbalance, 1.0)
-                          * max(contention, 1.0))
+                          * max(contention, 1.0) * max(straggle, 1.0))
                 client = (1.0 - self.expert_share) * var
                 var = (max(expert, client) + self.overlap_eps if overlap
                        else expert + client)
@@ -154,7 +165,114 @@ class VirtualClock(Clock):
             dt /= max(min(alive_frac, 1.0), 1e-3)
         return dt
 
+    def decode_split(self, *, tokens: int, servers: int = 1,
+                     alive_frac: float = 1.0) -> Tuple[float, float]:
+        """Client/expert decomposition of one *unstretched* decode step —
+        the async expert tier's cost primitives.
+
+        Returns ``(client_dt, expert_dt)``: the attention/dispatch/combine
+        share the client is busy for, and the expert-tier share at perfect
+        balance.  ``client_dt + expert_dt`` equals ``stop("decode", ...)``
+        with no overlap/imbalance/contention/straggle stretch, so a fully
+        synchronous wave costs exactly one lockstep step.  The expert share
+        is NOT divided by ``alive_frac`` — the async tier concentrates the
+        per-server micro-batch work onto the surviving replicas instead
+        (``expert_dt * servers * share_s`` server-seconds each), which
+        reproduces the same 1/alive_frac stretch physically.
+        """
+        var = self.decode_per_token * tokens / max(servers, 1)
+        client = self.decode_base + (1.0 - self.expert_share) * var
+        if self.degrade_with_dead:
+            client /= max(min(alive_frac, 1.0), 1e-3)
+        return client, self.expert_share * var
+
     def idle(self) -> float:
         # idle steps sweep the clock forward to the next scheduled arrival;
         # one decode-quantum keeps the sweep resolution at step granularity.
         return self.decode_base
+
+
+# ----------------------------------------------------------- event timeline
+
+@dataclass
+class Event:
+    """One scheduled completion on the discrete-event timeline.
+
+    Ordering is ``(time, seq)`` — ``seq`` is a monotone counter assigned at
+    post time, so simultaneous events fire in the deterministic order they
+    were scheduled (the tie-break the async determinism contract needs).
+    """
+
+    time: float
+    seq: int
+    kind: str            # prefill_done | mb_done | wave_done | ...
+    payload: Dict = field(default_factory=dict)
+    cancelled: bool = False
+
+
+class EventTimeline:
+    """A deterministic event heap: dispatch/compute/combine/migrate
+    completions posted at absolute engine-clock times, popped in
+    nondecreasing ``(time, seq)`` order.
+
+    This generalizes the per-step :class:`VirtualClock` charges into a
+    discrete-event timeline: instead of the engine adding one opaque ``dt``
+    per step, the async engine posts each phase's completion as an event
+    and advances its clock event-to-event.  Every fired event is recorded
+    in ``log`` (scalar payload fields only), and :meth:`fingerprint` hashes
+    the log — two replays of one seeded scenario must match bit-for-bit.
+    """
+
+    def __init__(self) -> None:
+        self._heap: List[Tuple[float, int, Event]] = []
+        self._seq = 0
+        self.log: List[Dict] = []
+
+    def __len__(self) -> int:
+        return sum(1 for _, _, ev in self._heap if not ev.cancelled)
+
+    def post(self, time: float, kind: str, **payload) -> Event:
+        """Schedule ``kind`` at absolute time ``time``; returns the event
+        (keep it to :meth:`cancel` later)."""
+        ev = Event(float(time), self._seq, kind, payload)
+        self._seq += 1
+        heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        return ev
+
+    def cancel(self, ev: Event) -> None:
+        """Invalidate a scheduled event (it will be silently skipped)."""
+        ev.cancelled = True
+
+    def peek_time(self) -> Optional[float]:
+        while self._heap and self._heap[0][2].cancelled:
+            heapq.heappop(self._heap)
+        return self._heap[0][0] if self._heap else None
+
+    def pop(self) -> Optional[Event]:
+        """Next live event in (time, seq) order; logs it as fired."""
+        while self._heap:
+            _, _, ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            entry = {"t": ev.time, "seq": ev.seq, "kind": ev.kind}
+            for k, v in ev.payload.items():
+                if isinstance(v, (str, bool, int, float)):
+                    entry[k] = v
+            self.log.append(entry)
+            return ev
+        return None
+
+    def clear_pending(self) -> None:
+        """Drop every scheduled-but-unfired event (client failure): the log
+        and the seq counter survive, so determinism across the drop holds."""
+        self._heap = []
+
+    def fingerprint(self, ndigits: int = 9) -> str:
+        """sha256 of the fired-event log (times rounded to ``ndigits``) —
+        the async determinism contract: same seed ⇒ same fingerprint."""
+        def clean(v):
+            return round(v, ndigits) if isinstance(v, float) else v
+        payload = [{k: clean(v) for k, v in sorted(e.items())}
+                   for e in self.log]
+        blob = json.dumps(payload, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()

@@ -54,6 +54,7 @@ from repro.configs.base import ModelConfig
 from repro.core.elastic import ServerPool
 from repro.serving.clock import Clock, WallClock
 from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.event_loop import AsyncExpertTier
 from repro.serving.frontend import (FrontendRouter, make_frontend_router)
 from repro.serving.metrics import ClusterMetrics
 from repro.serving.rebalance import (RebalanceConfig, RebalanceController,
@@ -113,6 +114,14 @@ class Cluster:
                                or ecfg.max_batch),
             n_redundant=(ecfg.n_redundant if ecfg.mode == "eaas" else 0),
             capacities=ecfg.server_capacities)
+        # ---- the shared async tier (exec_mode="async") ------------------
+        # ONE micro-batch queue set for the whole cluster: every client's
+        # waves queue on the same per-server busy frontiers, so cross-
+        # client expert contention emerges from queueing physically
+        # (charge_contention's analytic stretch is not applied on top)
+        self._tier: Optional[AsyncExpertTier] = None
+        if ecfg.exec_mode == "async":
+            self._tier = AsyncExpertTier(ecfg.num_servers)
         # ---- N clients over per-client mapping views --------------------
         # all clients share the initial params (same seed -> the cluster is
         # N replicas of one model; migrations keep every copy in lockstep
@@ -122,7 +131,8 @@ class Cluster:
         for i in range(ccfg.clients):
             eng = ServingEngine(cfg, ecfg, params=params, seed=seed,
                                 clock=clock_factory(),
-                                pool=self.pool.client_view(i), client_id=i)
+                                pool=self.pool.client_view(i), client_id=i,
+                                tier=self._tier)
             params = eng.executor.params
             self.clients.append(eng)
         self.client_alive = [True] * ccfg.clients
@@ -305,6 +315,18 @@ class Cluster:
         if self.ccfg.engine.mode == "eaas":
             if rank < self.pool.num_servers:
                 self.pool.server_failed(rank)
+            if self._tier is not None:
+                # shared tier: re-dispatch the dead server's queue once,
+                # then fan each moved micro-batch's fresh completion event
+                # to the client that owns it
+                moved = self._tier.fail_server(rank, self.clock)
+                for mb in moved:
+                    self.clients[mb.client_id]._post_redispatch(mb)
+                if moved:
+                    self._pool_event("redispatch", rank=rank,
+                                     count=len(moved))
+                for eng in self.clients:
+                    eng._reconcile_waves()
         else:
             for eng in self.clients:
                 eng.halted_until = (eng.step_idx
@@ -314,6 +336,23 @@ class Cluster:
         self._pool_event("server_recover", rank=rank)
         if rank < self.pool.num_servers:
             self.pool.server_recovered(rank)
+        if self._tier is not None and rank < self._tier.num_servers:
+            self._tier.recover_server(rank, self.clock)
+
+    def set_server_speed(self, rank: int, factor: float) -> None:
+        """Mark one expert server as a straggler (scenario
+        ``slow_server``): every client's lockstep decode charge sees it;
+        under async only that server's shared micro-batch queue slows."""
+        if rank >= self.pool.num_servers:
+            return
+        if factor <= 0:
+            raise ValueError(f"server speed factor must be > 0: {factor}")
+        for eng in self.clients:
+            if rank < len(eng.server_speed):
+                eng.server_speed[rank] = float(factor)
+        if self._tier is not None and rank < self._tier.num_servers:
+            self._tier.set_slowdown(rank, factor)
+        self._pool_event("slow_server", rank=rank, factor=float(factor))
 
     def set_skew(self, bias: np.ndarray) -> None:
         self.pool.set_route_bias(bias)
@@ -338,7 +377,13 @@ class Cluster:
     def charge_migration(self, dt: float) -> None:
         """The shared tier is busy copying weights: every alive client's
         next expert phase waits behind it.  (The caller accounts the
-        ``migration_time`` metric.)"""
+        ``migration_time`` metric.)  Under async the copy occupies the
+        shared micro-batch queues instead — clients keep running
+        attention/prefill and only their next dispatches queue behind the
+        copy (migration interleaves with in-flight micro-batches)."""
+        if self._tier is not None:
+            self._tier.occupy_all(self.clock, dt)
+            return
         for i, eng in enumerate(self.clients):
             if self.client_alive[i]:
                 eng.clock += dt
@@ -357,9 +402,14 @@ class Cluster:
         old = self.pool.num_servers
         if self.rebalancer is not None:
             self.rebalancer.abort()
+        for eng in self.clients:
+            eng._drain_async()           # quiesce in-flight waves first
         self.pool.scale_to(n)
         for eng in self.clients:
             eng.executor.resize(eng.pool)    # the client's PoolClient view
+            eng.server_speed = np.ones(n)
+        if self._tier is not None:
+            self._tier.resize(n, self.clock)
         self.last_placement_change = self.clock
         self._pool_event("scale", **{"from": old, "to": n})
 

@@ -15,6 +15,17 @@ re-sent to a replica.
 
 Deterministic cooperative scheduling (tick()) keeps runs replayable; the
 protocol itself is agnostic to who drives the actors.
+
+Relation to the engine stack: this module is the *protocol-literal* model
+(real buffers, real grouped GEMMs, polling actors), kept as the reference
+for the paper's client/server wire contract.  The serving engine models
+the same tier at the timing level instead —
+:class:`~repro.serving.event_loop.AsyncExpertTier` micro-batch queues
+driven by the :class:`~repro.serving.clock.EventTimeline` under
+``EngineConfig.exec_mode="async"``.  Stragglers exist in both:
+``ExpertServerProc.slow_factor`` here (the server only serves every Nth
+tick, so the client's timeout path fires and replicas absorb the rows),
+``AsyncExpertTier.set_slowdown`` there (queued micro-batches stretch).
 """
 
 from __future__ import annotations
@@ -37,7 +48,7 @@ class ExpertServerProc:
 
     def __init__(self, rank: int, cfg: ModelConfig, bank: Dict,
                  expert_ids: List[int], capacity: int, d_model: int,
-                 min_batch: int = 1):
+                 min_batch: int = 1, slow_factor: int = 1):
         self.rank = rank
         self.cfg = cfg
         self.expert_ids = list(expert_ids)
@@ -49,9 +60,13 @@ class ExpertServerProc:
         self.capacity = capacity
         self.d_model = d_model
         self.min_batch = min_batch
+        # straggler knob: serve only every Nth tick (1 = full speed); the
+        # cooperative-tick analogue of AsyncExpertTier.set_slowdown
+        self.slow_factor = max(1, int(slow_factor))
         self.alive = True
         self.served_tokens = 0
         self.batches = 0
+        self._ticks = 0
 
     # registration: a client attaches a buffer (paper §4.4 connection setup)
     def attach_client(self, client_id: str) -> SharedBuffer:
@@ -64,8 +79,14 @@ class ExpertServerProc:
             self.buffers[client_id].release()
 
     def tick(self) -> None:
-        """Poll flags; aggregate ready slots into ONE dynamic batch."""
+        """Poll flags; aggregate ready slots into ONE dynamic batch.  A
+        straggling server (``slow_factor`` > 1) skips all but every Nth
+        tick — requests sit in its buffers until the clients' timeout
+        path re-routes them to replicas."""
         if not self.alive:
+            return
+        self._ticks += 1
+        if self._ticks % self.slow_factor:
             return
         ready = [(cid, b) for cid, b in self.buffers.items() if b.poll()]
         if len(ready) < self.min_batch:

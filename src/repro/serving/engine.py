@@ -36,12 +36,27 @@ the step cost changes (the overlap-aware
 instead of the sum; ``decode_mode="serialized"`` is the exposed-collective
 ablation).  Chunked prefill (``prefill_chunk=N`` with ``policy="fair"``)
 bounds decode gaps to one chunk instead of one prompt.
+
+Execution modes (``exec_mode``): ``lockstep`` (default, bit-identical to
+the pre-async engine) advances one synchronous step at a time — every step
+blocks on the full expert round-trip.  ``async`` kills that barrier: the
+engine computes step *values* eagerly (decode outputs are
+batch-composition independent, so values and timing decouple) but posts
+their completions onto a discrete-event timeline
+(:class:`~repro.serving.clock.EventTimeline`).  A decode wave's expert
+share is dispatched as per-server micro-batches into the
+:class:`~repro.serving.event_loop.AsyncExpertTier` and the wave completes
+when its last micro-batch drains; while the wave's expert phase is in
+flight the client is free to run prefill chunks — the overlap lockstep
+structurally cannot express.  Same seed ⇒ bitwise-identical per-request
+token streams in both modes; only timing (TTFT/ITL/throughput) moves.
 """
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable, Deque, Optional
 
 import jax
 import jax.numpy as jnp
@@ -49,9 +64,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.elastic import ServerPool
+from repro.core.load_balance import server_loads
 from repro.core.monitor import Monitor
 from repro.models.transformer import build_model
-from repro.serving.clock import Clock, WallClock
+from repro.serving.clock import (Clock, Event, EventTimeline, VirtualClock,
+                                 WallClock)
+from repro.serving.event_loop import AsyncExpertTier, MicroBatch
 from repro.serving.executor import Executor
 from repro.serving.kv_pool import BlockPool
 from repro.serving.metrics import ServingMetrics
@@ -86,6 +104,19 @@ class EngineConfig:
     # client pipelining, §4.2) | serialized (the ablation: same split,
     # collectives exposed)
     decode_mode: str = "lockstep"
+    # lockstep (default: synchronous per-step advancement, bit-identical to
+    # the pre-async engine) | async (event-driven expert tier: decode waves
+    # dispatch per-server micro-batches whose completions post back through
+    # a discrete-event timeline; prefill overlaps in-flight expert phases).
+    # async needs mode="eaas" + MoE, kv_mode="dense",
+    # decode_mode="lockstep", a VirtualClock and a decoder-family model.
+    exec_mode: str = "lockstep"
+    # decode waves in flight under exec_mode="async" (ping-pong double
+    # buffering): wave k+1 dispatches on wave k's eagerly-sampled tokens
+    # before k's combine lands, so the client's attention share overlaps
+    # the tier's expert share.  1 = strict wave-at-a-time (the cadence then
+    # equals lockstep exactly; useful for ablation).
+    async_depth: int = 2
     # dispatch-buffer sizing override (tokens per client step); default is
     # max_batch, the seed behaviour — raise it when prefill chunks carry
     # more tokens than a decode batch so fixed-capacity buffers don't drop
@@ -138,11 +169,37 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig,
                  params=None, seed: int = 0, clock: Optional[Clock] = None,
-                 pool=None, client_id: int = 0):
+                 pool=None, client_id: int = 0, tier=None):
         self.cfg = cfg
         self.ecfg = engine_cfg
         self.client_id = client_id
         self.clk = clock if clock is not None else WallClock()
+        if engine_cfg.exec_mode not in ("lockstep", "async"):
+            raise ValueError(
+                f"unknown exec_mode {engine_cfg.exec_mode!r}; expected "
+                "'lockstep' or 'async'")
+        if engine_cfg.exec_mode == "async":
+            if engine_cfg.mode != "eaas" or not cfg.moe:
+                raise ValueError(
+                    "exec_mode='async' models the EAAS expert tier — it "
+                    "needs mode='eaas' and an MoE config")
+            if engine_cfg.kv_mode != "dense":
+                raise ValueError(
+                    "exec_mode='async' supports kv_mode='dense' only "
+                    "(paged preemption is defined against the lockstep "
+                    "step loop)")
+            if engine_cfg.decode_mode != "lockstep":
+                raise ValueError(
+                    "exec_mode='async' overlaps at the wave level — "
+                    "decode_mode must stay 'lockstep'")
+            if not isinstance(self.clk, VirtualClock):
+                raise ValueError(
+                    "exec_mode='async' needs a VirtualClock: the event "
+                    "timeline is a deterministic modeled-cost timeline")
+            if engine_cfg.async_depth < 1:
+                raise ValueError(
+                    f"async_depth must be >= 1, got "
+                    f"{engine_cfg.async_depth}")
         S = engine_cfg.num_servers if engine_cfg.mode != "tp" else 1
         # pool injected = cluster member: the expert tier is shared, its
         # placement is the cluster's to change (scale_to/rebalance here
@@ -169,6 +226,12 @@ class ServingEngine:
         self.model = build_model(
             cfg, num_servers=S if cfg.moe else 1,
             redundant_table=self.pool.redundant_table if self.pool else None)
+        if engine_cfg.exec_mode == "async" \
+                and self.model.cache_batch_axis is None:
+            raise ValueError(
+                "exec_mode='async' needs a model family with a uniform "
+                "cache batch axis (decoder family) — wave decodes mask "
+                "inactive slot rows")
         key = jax.random.PRNGKey(seed)
         params = params if params is not None else \
             self.model.init_params(key)
@@ -215,6 +278,22 @@ class ServingEngine:
         self.clock = 0.0
         self.halted_until = -1
         self._last_decode_time = 0.01
+        # per-server straggler factors (scenario slow_server): lockstep
+        # charges the max alive factor as an expert-share stretch; the
+        # async tier applies them per micro-batch queue
+        self.server_speed = np.ones(self._pool_size())
+        # --- async exec state -------------------------------------------
+        self.timeline = EventTimeline()
+        self.tier: Optional[AsyncExpertTier] = None
+        self._client_free_at = 0.0       # attention client busy-until
+        # in-flight decode waves, FIFO in dispatch order (completion is
+        # FIFO too: combine is in-order, so a younger wave that drains
+        # early waits for its elders)
+        self._waves: Deque[dict] = deque()
+        self._wave_counter = 0
+        if engine_cfg.exec_mode == "async":
+            # a cluster injects the shared tier; standalone owns its own
+            self.tier = tier if tier is not None else AsyncExpertTier(S)
         # attention clients currently sharing the expert tier (the cluster
         # sets this before each member step; 1.0 = standalone engine, and
         # the virtual cost model is bit-identical to the pre-cluster one)
@@ -263,6 +342,24 @@ class ServingEngine:
     def _pool_size(self) -> int:
         return self.pool.num_servers if self.pool else 1
 
+    def _alive_mask(self) -> np.ndarray:
+        """This client's view of server liveness ((S,) bool)."""
+        if self.pool is None:
+            return np.ones(1, bool)
+        if hasattr(self.pool, "alive_mask"):
+            return np.asarray(self.pool.alive_mask(), bool)
+        return np.asarray(self.pool.smap.alive, bool)
+
+    def _straggle(self) -> float:
+        """Slowdown factor of the slowest *alive* expert server — a
+        lockstep expert phase finishes with its slowest server."""
+        if self.pool is None or self.ecfg.mode != "eaas":
+            return 1.0
+        alive = self._alive_mask()
+        n = min(len(alive), len(self.server_speed))
+        sp = self.server_speed[:n][alive[:n]]
+        return float(sp.max()) if sp.size else 1.0
+
     # --------------------------------------------------- front-end signals
     def pending_prefill_tokens(self) -> int:
         """Unprefilled prompt tokens (queued + mid-chunk) — the autoscaler
@@ -293,6 +390,16 @@ class ServingEngine:
                 stranded.append(r)
                 self.scheduler.release(b)
         self.executor._staging.clear()
+        if self.ecfg.exec_mode == "async":
+            # strand only this client's queued tier work: its in-flight
+            # micro-batches are abandoned (the servers finish the already
+            # dispatched compute — occupancy stays — and discard results);
+            # sibling clients' queues are untouched
+            if self.tier is not None:
+                self.tier.cancel_client(self.client_id)
+            self.timeline.clear_pending()
+            self._waves.clear()
+            self._client_free_at = self.clock
         return stranded
 
     # ------------------------------------------------------------- control
@@ -314,6 +421,18 @@ class ServingEngine:
         if self.ecfg.mode == "eaas":
             if self.pool and rank < self.pool.num_servers:
                 self.pool.server_failed(rank)     # mapping mask update only
+            if self.tier is not None:
+                # re-dispatch the dead server's queued micro-batches to
+                # survivors: fresh completion events from the new finish
+                # times; the old events are stale by generation
+                moved = self.tier.fail_server(rank, self.clock)
+                for mb in moved:
+                    self._post_redispatch(mb)
+                if moved:
+                    self.metrics.events.append(
+                        {"t": self.clock, "event": "redispatch",
+                         "rank": rank, "count": len(moved)})
+                self._reconcile_waves()
         elif self.ecfg.mode == "monolithic_ep":
             self.halted_until = self.step_idx + self.ecfg.restart_steps
         elif self.ecfg.mode == "tp":
@@ -324,6 +443,26 @@ class ServingEngine:
             {"t": self.clock, "event": "server_recover", "rank": rank})
         if self.pool and rank < self.pool.num_servers:
             self.pool.server_recovered(rank)
+        if self.tier is not None and rank < self.tier.num_servers:
+            self.tier.recover_server(rank, self.clock)
+
+    def set_server_speed(self, rank: int, factor: float) -> None:
+        """Mark expert server ``rank`` as running ``factor``× slower
+        (scenario ``slow_server``; 1.0 restores full speed).  Lockstep
+        charges every decode step the max alive factor — the whole tier
+        waits for its slowest server; the async tier slows only that
+        server's micro-batch queue, which is exactly the tail-latency
+        asymmetry the differential tests pin."""
+        if self.pool is None or rank >= len(self.server_speed):
+            return
+        if factor <= 0:
+            raise ValueError(f"server speed factor must be > 0: {factor}")
+        self.server_speed[rank] = float(factor)
+        if self.tier is not None and rank < self.tier.num_servers:
+            self.tier.set_slowdown(rank, factor)
+        self.metrics.events.append(
+            {"t": self.clock, "event": "slow_server", "rank": rank,
+             "factor": float(factor)})
 
     def apply_migration(self, copies) -> None:
         """Apply one expert-weight migration chunk to this engine's
@@ -335,7 +474,16 @@ class ServingEngine:
     def charge_migration(self, dt: float) -> None:
         """Advance the engine clock by a migration chunk's cost.  The
         cluster version charges every client — the shared expert tier is
-        busy copying weights, so everyone's next expert phase waits."""
+        busy copying weights, so everyone's next expert phase waits.
+
+        Under ``exec_mode='async'`` the copy occupies the *expert tier*
+        instead: in-flight micro-batches keep their committed finish
+        times, subsequent dispatches queue behind the copy, and the client
+        keeps running attention/prefill — migration chunks interleave with
+        in-flight work rather than stalling the world."""
+        if self.tier is not None:
+            self.tier.occupy_all(self.clock, dt)
+            return
         self.clock += dt
 
     def rebalance(self) -> None:
@@ -390,8 +538,12 @@ class ServingEngine:
         old = self.pool.num_servers
         if self.rebalancer is not None:
             self.rebalancer.abort()      # a resize replans placement anyway
+        self._drain_async()              # quiesce in-flight waves first
         self.pool.scale_to(n)
         self.executor.resize(self.pool)
+        self.server_speed = np.ones(n)   # fresh pool, fresh speeds
+        if self.tier is not None:
+            self.tier.resize(n, self.clock)
         self.last_placement_change = self.clock
         self.metrics.events.append(
             {"t": self.clock, "event": "scale", "from": old, "to": n})
@@ -407,13 +559,16 @@ class ServingEngine:
             self.metrics.timeline.append(
                 {"t": self.clock, "tokens": 0, "halted": True})
             return
-        plan = self.scheduler.next_plan()
-        if isinstance(plan, PrefillChunk):
-            self._step_prefill(plan)
-        elif isinstance(plan, DecodeBatch):
-            self._step_decode(plan)
+        if self.ecfg.exec_mode == "async":
+            self._step_async()
         else:
-            self.clock += self.clk.idle()
+            plan = self.scheduler.next_plan()
+            if isinstance(plan, PrefillChunk):
+                self._step_prefill(plan)
+            elif isinstance(plan, DecodeBatch):
+                self._step_decode(plan)
+            else:
+                self.clock += self.clk.idle()
         if self.rebalancer is not None:
             # migration chunks interleave with decode steps — serving
             # never pauses for a replan (paper §4.5 live adaptation)
@@ -503,7 +658,8 @@ class ServingEngine:
                            imbalance=(imbalance
                                       if self.ecfg.charge_imbalance
                                       else 1.0),
-                           contention=self.expert_contention)
+                           contention=self.expert_contention,
+                           straggle=self._straggle())
         self._last_decode_time = dt
         self.clock += dt
         next_tokens = np.asarray(sample_batch(logits, temps,
@@ -529,6 +685,299 @@ class ServingEngine:
                 sch.release(b)
         self.metrics.timeline.append(
             {"t": self.clock, "tokens": produced, "halted": False})
+
+    # --------------------------------------------------------- async steps
+    def _step_async(self) -> None:
+        """One event-driven iteration.
+
+        If the attention client is free, plan eagerly: a prefill chunk
+        runs now (overlapping any in-flight wave's expert phase), and a
+        decode wave dispatches its expert share into the tier as long as
+        fewer than ``async_depth`` waves are in flight — wave k+1 runs on
+        wave k's eagerly-sampled tokens before k's combine lands (ping-pong
+        double buffering), so the client's attention share and the tier's
+        expert share overlap instead of summing.  Otherwise advance the
+        clock to the earlier of the next timeline event and the client's
+        busy-until, handling the event if that's what comes first.
+        """
+        if self.clock >= self._client_free_at:
+            plan = self.scheduler.next_plan()
+            if isinstance(plan, PrefillChunk):
+                self._async_prefill(plan)
+                return
+            if (isinstance(plan, DecodeBatch)
+                    and len(self._waves) < self.ecfg.async_depth
+                    and self._async_decode(plan)):
+                return
+        ev_t = self.timeline.peek_time()
+        free_t = (self._client_free_at
+                  if self._client_free_at > self.clock else None)
+        if ev_t is not None and (free_t is None or ev_t <= free_t):
+            ev = self.timeline.pop()
+            self.clock = max(self.clock, ev.time)
+            self._handle_event(ev)
+        elif free_t is not None:
+            self.clock = free_t
+        else:
+            self.clock += self.clk.idle()
+
+    def _async_prefill(self, plan: PrefillChunk) -> None:
+        """Run one prefill chunk eagerly; its completion (scheduler
+        progress, first-token sampling, TTFT) lands at event time.  Values
+        are computed now — they don't depend on when the chunk finishes —
+        so the event handler only does bookkeeping."""
+        req, b = plan.request, plan.slot
+        chunk = (plan.tokens if plan.tokens is not None
+                 else req.prompt[plan.start:plan.start + plan.length])
+        self.clk.start()
+        expert_load = None
+        if plan.is_first and plan.is_last:
+            logits = self.executor.prefill(b, chunk)
+        else:
+            logits, expert_load = self.executor.prefill_chunk(
+                b, chunk, plan.start,
+                is_first=plan.is_first, is_last=plan.is_last)
+        if (expert_load is not None and self.pool is not None
+                and self.ecfg.prefill_load_feedback):
+            self.pool.observe_load(np.asarray(expert_load))
+        dt = self.clk.stop("prefill", result=logits, tokens=plan.length,
+                           servers=self._pool_size(),
+                           alive_frac=self._alive_frac())
+        first = None
+        if plan.is_last and not req.output_tokens:
+            key = jnp.asarray(self.scheduler.slot_keys[b])
+            first = int(sample(logits, req.sampling.temperature,
+                               jax.random.fold_in(key, 0))[0])
+        t_done = self.clock + dt
+        self._client_free_at = t_done
+        self.timeline.post(t_done, "prefill_done", slot=b,
+                           rid=req.request_id, length=plan.length,
+                           last=plan.is_last, first=first, req=req)
+
+    def _slot_pending(self, b: int) -> list:
+        """Tokens sampled for slot ``b`` by in-flight waves, oldest first —
+        computed eagerly at dispatch but not yet appended (that happens at
+        each wave's completion event)."""
+        return [int(w["tokens"][b]) for w in self._waves
+                if b in w["slot_set"]]
+
+    def _slot_exhausted(self, b: int, r: Request) -> bool:
+        """Counting in-flight sampled tokens, will slot ``b`` be done when
+        its last wave lands?  Mirrors the lockstep done-check exactly, so
+        a slot is never dispatched past its final token even though that
+        token hasn't been committed yet."""
+        pend = self._slot_pending(b)
+        count = len(r.output_tokens) + len(pend)
+        last = pend[-1] if pend else (
+            r.output_tokens[-1] if r.output_tokens else None)
+        return (count >= r.sampling.max_new_tokens
+                or (self.ecfg.eos_token is not None
+                    and last == self.ecfg.eos_token)
+                or len(r.prompt) + count >= self.ecfg.max_seq - 1)
+
+    def _async_decode(self, plan: DecodeBatch) -> bool:
+        """Dispatch one decode wave: compute values eagerly (masked so
+        non-wave slot rows stay resumable), split the step cost into the
+        client share (attention/dispatch/combine — the client is busy for
+        it) and the expert share, and enqueue the expert share as
+        per-server micro-batches.  A slot whose previous token is still
+        in flight decodes on the eagerly-sampled value — values never wait
+        for events — while completed-token bookkeeping (append, ITL,
+        release) stays at event time.  Returns False when every offered
+        slot is already exhausted (nothing dispatched)."""
+        sch = self.scheduler
+        B = len(sch.slots)
+        active = []
+        for b in plan.slots:
+            r = sch.slots[b]
+            if self._slot_exhausted(b, r):
+                # park it until its final wave's completion releases it
+                sch.hold(b)
+            else:
+                active.append(b)
+        if not active:
+            return False
+        tokens = np.zeros((B, 1), np.int32)
+        temps = np.zeros(B, np.float32)
+        steps = np.zeros(B, np.int32)
+        mask = np.zeros(B, bool)
+        for b in active:
+            r = sch.slots[b]
+            pend = self._slot_pending(b)
+            tokens[b, 0] = pend[-1] if pend else r.output_tokens[-1]
+            temps[b] = r.sampling.temperature
+            steps[b] = len(r.output_tokens) + len(pend)
+            mask[b] = True
+        self.clk.start()
+        logits, expert_load = self.executor.decode_masked(tokens, mask)
+        if self.pool is not None:
+            self.pool.observe_load(np.asarray(expert_load))
+            if self.ecfg.charge_imbalance or self.track_imbalance:
+                self.metrics.observe_balance(self.pool.current_imbalance())
+        next_tokens = np.asarray(sample_batch(logits, temps,
+                                              sch.slot_keys, steps))
+        S = self._pool_size()
+        af = self._alive_frac()
+        client_dt, expert_dt = self.clk.decode_split(
+            tokens=len(active), servers=S, alive_frac=af)
+        t_dispatch = self.clock + client_dt
+        self._client_free_at = t_dispatch
+        wave_id = self._wave_counter
+        self._wave_counter += 1
+        # per-server expert seconds: expert_dt is the perfectly-balanced
+        # per-server time; by default each alive server gets the uniform
+        # share expert_dt * S / alive (dead servers' work concentrates on
+        # survivors — the 1/alive_frac stretch, reproduced physically as
+        # queueing).  With charge_imbalance the shares follow this step's
+        # *real* routed load instead, mirroring the lockstep clock's
+        # analytic imbalance stretch.
+        alive = self._alive_mask()
+        if self.ecfg.charge_imbalance:
+            loads = server_loads(np.asarray(expert_load, np.float64),
+                                 self.pool.smap.table, S, alive=alive,
+                                 capacities=getattr(self.pool, "capacities",
+                                                    None))
+        else:
+            loads = np.asarray(alive, np.float64)
+        total = float(loads.sum())
+        wave = {"id": wave_id, "slots": active, "slot_set": set(active),
+                "tokens": next_tokens, "pending": set()}
+        self._waves.append(wave)
+        if total <= 0.0:
+            # no alive server / no routed-load signal (all-dead pool
+            # edge): one aggregate completion at the analytic stretched
+            # cost; the sentinel keeps the wave pending until it fires
+            wave["pending"].add("wave")
+            self.timeline.post(t_dispatch + expert_dt / max(af, 1e-3),
+                               "wave_done", wave=wave_id)
+        else:
+            work = expert_dt * S * loads / total
+            mbs = self.tier.dispatch(self.client_id, wave_id, work,
+                                     now=t_dispatch, tokens=loads)
+            for mb in mbs:
+                wave["pending"].add(mb.mb_id)
+                self.timeline.post(mb.finish_t, "mb_done", mb=mb.mb_id,
+                                   gen=mb.generation, wave=wave_id,
+                                   server=mb.server)
+            if not mbs:
+                wave["pending"].add("wave")
+                self.timeline.post(t_dispatch, "wave_done", wave=wave_id)
+        return True
+
+    # -------------------------------------------------------- async events
+    def _handle_event(self, ev: Event) -> None:
+        if ev.kind == "prefill_done":
+            self._on_prefill_done(ev)
+        elif ev.kind == "mb_done":
+            self._on_mb_done(ev)
+        elif ev.kind == "wave_done":
+            for w in self._waves:
+                if w["id"] == ev.payload["wave"]:
+                    w["pending"].discard("wave")
+                    break
+            self._drain_finished_waves()
+
+    def _on_prefill_done(self, ev: Event) -> None:
+        p = ev.payload
+        b, req = p["slot"], p["req"]
+        if self.scheduler.slots[b] is not req:
+            return                      # slot was aborted/released meanwhile
+        self.scheduler.prefill_advanced(b, p["length"])
+        if p["last"] and p["first"] is not None:
+            req.output_tokens.append(p["first"])
+            req.prefill_time = self.clock
+            self.metrics.ttfts.append(self.clock - req.arrival_time)
+            self.metrics.events.append(
+                {"t": self.clock, "event": "prefill",
+                 "rid": req.request_id,
+                 "ttft": self.clock - req.arrival_time})
+
+    def _on_mb_done(self, ev: Event) -> None:
+        p = ev.payload
+        if not self.tier.is_current(p["mb"], p["gen"]):
+            return                      # re-dispatched or cancelled since
+        mb = self.tier.mbs[p["mb"]]
+        self.tier.mark_done(mb)
+        # queueing delay: how long the micro-batch waited behind other
+        # work on its server — the first-class tail-latency signal
+        self.metrics.queue_delays.append(mb.start_t - mb.enqueue_t)
+        for w in self._waves:
+            if w["id"] == mb.wave_id:
+                w["pending"].discard(mb.mb_id)
+                break
+        self._drain_finished_waves()
+
+    def _drain_finished_waves(self) -> None:
+        """Retire drained waves in dispatch order.  Combine is in-order:
+        a younger wave whose micro-batches all landed still waits for its
+        elders, so per-slot token streams commit in sequence."""
+        while self._waves and not self._waves[0]["pending"]:
+            self._finish_wave(self._waves.popleft())
+
+    def _finish_wave(self, w: dict) -> None:
+        """The wave's last micro-batch drained (and every older wave
+        retired): append the (already sampled) tokens at event time,
+        retire finished requests."""
+        sch = self.scheduler
+        next_tokens = w["tokens"]
+        produced = 0
+        for b in w["slots"]:
+            r = sch.slots[b]
+            if r is None:
+                continue
+            tok = int(next_tokens[b])
+            r.output_tokens.append(tok)
+            r.token_times.append(self.clock)
+            produced += 1
+            self.metrics.total_output_tokens += 1
+            done = (len(r.output_tokens) >= r.sampling.max_new_tokens or
+                    (self.ecfg.eos_token is not None and
+                     tok == self.ecfg.eos_token) or
+                    len(r.prompt) + len(r.output_tokens) >=
+                    self.ecfg.max_seq - 1)
+            if done:
+                # _slot_exhausted kept this slot out of every later wave,
+                # so releasing here can't orphan an in-flight token
+                r.finish_time = self.clock
+                self.metrics.completed += 1
+                self.metrics.itls.extend(r.itl())
+                sch.release(b)
+        self.metrics.timeline.append(
+            {"t": self.clock, "tokens": produced, "halted": False})
+
+    def _post_redispatch(self, mb: MicroBatch) -> None:
+        """Post the fresh completion event for a failure-re-dispatched
+        micro-batch (the cluster fans these to the owning client)."""
+        self.timeline.post(mb.finish_t, "mb_done", mb=mb.mb_id,
+                           gen=mb.generation, wave=mb.wave_id,
+                           server=mb.server)
+
+    def _reconcile_waves(self) -> None:
+        """Drop cancelled micro-batches from the in-flight waves (a
+        failure with no survivors cancels outright); retire waves left
+        with nothing pending — no event will ever fire for a cancelled
+        batch."""
+        if self.tier is None:
+            return
+        for w in self._waves:
+            for mb_id in list(w["pending"]):
+                if mb_id == "wave":
+                    continue
+                mb = self.tier.mbs.get(mb_id)
+                if mb is None or mb.cancelled:
+                    w["pending"].discard(mb_id)
+        self._drain_finished_waves()
+
+    def _drain_async(self) -> None:
+        """Run the event timeline dry (the quiesce barrier before
+        placement changes that re-shard the executor)."""
+        if self.ecfg.exec_mode != "async":
+            return
+        while self.timeline.peek_time() is not None:
+            ev = self.timeline.pop()
+            self.clock = max(self.clock, ev.time)
+            self._handle_event(ev)
+        self.clock = max(self.clock, self._client_free_at)
 
     def run(self, max_steps: int = 10_000,
             on_step: Optional[Callable[["ServingEngine"], None]] = None

@@ -1,0 +1,227 @@
+"""Per-expert-server micro-batch queues — the async expert tier's data plane.
+
+The paper's disaggregation claim is that expert servers are *independent
+services*: attention clients enqueue micro-batches and servers drain them
+continuously, so one slow or busy server delays only the work routed to it
+instead of barriering the whole step.  This module is the host-side model
+of that tier:
+
+* :class:`MicroBatch` — one client wave's routed share on one server:
+  ``tokens`` of routed load, ``work`` seconds of compute at speed 1,
+  enqueue/start/finish times filled in by the queue simulation;
+* :class:`ServerQueue` — one expert server: a ``busy_until`` frontier plus
+  a per-server ``slowdown`` factor (scenario ``slow_server`` events) and a
+  liveness flag.  Service is work-conserving FIFO in dispatch order;
+* :class:`AsyncExpertTier` — the shared tier: dispatch, failure
+  re-dispatch (queued micro-batches of a dead server move to the
+  least-busy surviving server — no token is lost, the paper's replica
+  failover), recovery, migration occupancy (rebalance weight-copy chunks
+  busy the servers, not the clients), and conservation counters
+  (``enqueued == completed + cancelled + in_flight()`` — the invariant the
+  property tests pin).
+
+The tier computes *when* modeled work finishes; it never touches arrays —
+the engine computes values eagerly at dispatch (decode outputs are bitwise
+independent of batch composition and of placement, so timing and values
+decouple) and posts the finish times onto its
+:class:`~repro.serving.clock.EventTimeline`.  Under a cluster the tier is
+shared: every client's micro-batches queue on the same ``busy_until``
+frontiers, so cross-client contention emerges from queueing instead of an
+analytic stretch factor.
+
+Re-dispatch bookkeeping: each micro-batch carries a ``generation`` bumped
+when it moves servers.  Completion events posted for the old placement
+carry the stale generation and are ignored (:meth:`AsyncExpertTier.
+is_current`) — the standard DES trick for revising an eagerly scheduled
+future.  A server's ``slowdown`` applies to micro-batches dispatched from
+then on; already-queued work keeps its committed finish time (the model's
+service commitment, kept for determinism).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class MicroBatch:
+    """One wave's routed share on one expert server (modeled timing)."""
+
+    mb_id: int
+    client_id: int
+    wave_id: int
+    server: int
+    tokens: float              # routed load share (diagnostic)
+    work: float                # seconds of compute at slowdown 1.0
+    enqueue_t: float
+    start_t: float = 0.0
+    finish_t: float = 0.0
+    generation: int = 0        # bumped on failure re-dispatch
+    done: bool = False
+    cancelled: bool = False
+
+
+@dataclass
+class ServerQueue:
+    """One expert server's service frontier (work-conserving FIFO)."""
+
+    rank: int
+    slowdown: float = 1.0      # >1 = straggler (scenario slow_server)
+    alive: bool = True
+    busy_until: float = 0.0
+    enqueued: int = 0
+    drained: int = 0
+
+    def schedule(self, mb: MicroBatch, now: float) -> None:
+        """Append ``mb`` to this server's queue: it starts when the server
+        frees up and runs for ``work * slowdown`` seconds."""
+        mb.server = self.rank
+        mb.start_t = max(float(now), self.busy_until)
+        mb.finish_t = mb.start_t + mb.work * self.slowdown
+        self.busy_until = mb.finish_t
+        self.enqueued += 1
+
+
+class AsyncExpertTier:
+    """The shared micro-batch queue tier over ``num_servers`` servers."""
+
+    def __init__(self, num_servers: int):
+        self.queues: List[ServerQueue] = [ServerQueue(s)
+                                          for s in range(num_servers)]
+        self.mbs: Dict[int, MicroBatch] = {}
+        self._next_id = 0
+        self.enqueued = 0
+        self.completed = 0
+        self.cancelled = 0
+        self.redispatched = 0
+        self.migration_busy = 0.0          # seconds of migrate occupancy
+
+    @property
+    def num_servers(self) -> int:
+        return len(self.queues)
+
+    def in_flight(self) -> int:
+        """Micro-batches dispatched but neither completed nor cancelled —
+        the conservation counter (enqueued == completed + cancelled +
+        in_flight)."""
+        return self.enqueued - self.completed - self.cancelled
+
+    # ----------------------------------------------------------- dispatch
+    def dispatch(self, client_id: int, wave_id: int, work: np.ndarray,
+                 now: float, tokens: Optional[np.ndarray] = None
+                 ) -> List[MicroBatch]:
+        """Enqueue one wave: ``work[s]`` seconds of expert compute on
+        server ``s`` (zero entries skipped).  Returns the micro-batches
+        with committed start/finish times."""
+        work = np.asarray(work, np.float64)
+        out: List[MicroBatch] = []
+        for s in range(min(len(work), self.num_servers)):
+            w = float(work[s])
+            if w <= 0.0:
+                continue
+            mb = MicroBatch(
+                mb_id=self._next_id, client_id=client_id, wave_id=wave_id,
+                server=s, tokens=float(tokens[s]) if tokens is not None
+                else w, work=w, enqueue_t=float(now))
+            self._next_id += 1
+            self.queues[s].schedule(mb, now)
+            self.mbs[mb.mb_id] = mb
+            self.enqueued += 1
+            out.append(mb)
+        return out
+
+    def is_current(self, mb_id: int, generation: int) -> bool:
+        """True when a completion event for (mb_id, generation) is still
+        valid — not re-dispatched since, not cancelled, not already done."""
+        mb = self.mbs.get(mb_id)
+        return (mb is not None and not mb.cancelled and not mb.done
+                and mb.generation == generation)
+
+    def mark_done(self, mb: MicroBatch) -> None:
+        mb.done = True
+        self.queues[mb.server].drained += 1
+        self.completed += 1
+
+    # ------------------------------------------------------------- faults
+    def fail_server(self, rank: int, now: float) -> List[MicroBatch]:
+        """A server dies mid-drain: every unfinished micro-batch queued on
+        it is re-dispatched to the least-busy surviving server (FIFO order
+        preserved; no token loss).  Returns the moved micro-batches — the
+        owning engines post fresh completion events from the new finish
+        times (old events are stale by generation)."""
+        if rank >= self.num_servers:
+            return []
+        q = self.queues[rank]
+        q.alive = False
+        q.busy_until = min(q.busy_until, float(now))
+        victims = sorted(
+            (mb for mb in self.mbs.values()
+             if mb.server == rank and not mb.done and not mb.cancelled),
+            key=lambda m: (m.start_t, m.mb_id))
+        moved: List[MicroBatch] = []
+        for mb in victims:
+            survivors = [t for t in self.queues if t.alive]
+            if not survivors:
+                # nobody can serve it: the wave will be completed by the
+                # engine's degenerate path; count the loss explicitly
+                mb.cancelled = True
+                self.cancelled += 1
+                continue
+            target = min(survivors, key=lambda t: (t.busy_until, t.rank))
+            mb.generation += 1
+            target.schedule(mb, now)
+            self.redispatched += 1
+            moved.append(mb)
+        return moved
+
+    def recover_server(self, rank: int, now: float) -> None:
+        if rank >= self.num_servers:
+            return
+        q = self.queues[rank]
+        q.alive = True
+        q.busy_until = max(q.busy_until, float(now))
+
+    def set_slowdown(self, rank: int, factor: float) -> None:
+        """Scenario ``slow_server``: future micro-batches on ``rank`` run
+        ``factor``× slower (already-queued work keeps its committed finish
+        time).  ``factor=1.0`` restores full speed."""
+        if rank >= self.num_servers:
+            return
+        if factor <= 0:
+            raise ValueError(f"slowdown factor must be > 0, got {factor}")
+        self.queues[rank].slowdown = float(factor)
+
+    def cancel_client(self, client_id: int) -> int:
+        """A client died: its in-flight micro-batches are abandoned (the
+        servers finish the dispatched compute and discard the results —
+        dispatched work cannot be clawed back, so the occupancy stays)."""
+        n = 0
+        for mb in self.mbs.values():
+            if mb.client_id == client_id and not mb.done \
+                    and not mb.cancelled:
+                mb.cancelled = True
+                self.cancelled += 1
+                n += 1
+        return n
+
+    # ----------------------------------------------------------- control
+    def occupy_all(self, now: float, dt: float) -> None:
+        """A migration chunk busies every alive server for ``dt`` (the
+        weight copy lands on the servers, not the clients): in-flight
+        micro-batches keep their committed times, the *next* dispatches
+        queue behind the copy — migration interleaves with decoding
+        instead of stalling the clients."""
+        for q in self.queues:
+            if q.alive:
+                q.busy_until = max(q.busy_until, float(now)) + float(dt)
+        self.migration_busy += float(dt)
+
+    def resize(self, num_servers: int, now: float) -> None:
+        """Elastic pool resize (the engine drains in-flight waves first —
+        re-sharding quiesces the tier): fresh queues at full speed, all
+        free from ``now``."""
+        self.queues = [ServerQueue(s, busy_until=float(now))
+                       for s in range(num_servers)]

@@ -146,6 +146,29 @@ class Executor:
 
         self._jit_prefill = jax.jit(prefill_fn)
         self._jit_decode = jax.jit(decode_fn)
+        self._jit_masked = None
+        if model.cache_batch_axis is not None:
+            # async exec mode decodes a *subset* of slots while others wait
+            # on their wave's completion event: the dense decode kernel
+            # still runs the full batch (one compile, one shape), but
+            # inactive rows' cache writes are masked back to their old
+            # values so a later wave resumes them bit-exactly.
+            def masked_decode_fn(params, tokens, cache, mask, rt_arrays):
+                logits, new_cache, st = decode_step(params, tokens, cache,
+                                                    rt_arrays)
+                axis = model.cache_batch_axis
+
+                def keep(new, old):
+                    if not hasattr(new, "shape") or new.ndim <= axis \
+                            or new.shape[axis] != mask.shape[0]:
+                        return new
+                    shape = [1] * new.ndim
+                    shape[axis] = mask.shape[0]
+                    return jnp.where(mask.reshape(shape), new, old)
+
+                return logits, jax.tree.map(keep, new_cache, cache), \
+                    st.expert_load
+            self._jit_masked = jax.jit(masked_decode_fn)
         self._jit_chunk = None
         if model.prefill_chunk is not None:
             def chunk_fn(params, tokens, cache, start, rt_arrays):
@@ -228,6 +251,22 @@ class Executor:
         """One decode step over the whole slot batch -> (logits, load)."""
         logits, self.cache, expert_load = self._jit_decode(
             self.params, jnp.asarray(tokens), self.cache, self._rt_arrays())
+        return logits, expert_load
+
+    def decode_masked(self, tokens: np.ndarray, mask: np.ndarray
+                      ) -> Tuple[jax.Array, np.ndarray]:
+        """One decode step where only ``mask``-true slots advance their
+        cache row; masked rows are restored bit-exactly (the dense
+        ``append_decode`` advances length for every row, so the restore is
+        what keeps inactive slots resumable).  Active rows' logits are
+        bitwise identical to a full-batch :meth:`decode` — decode outputs
+        are batch-composition independent, which is what lets the async
+        engine reuse lockstep's values with different timing."""
+        assert self._jit_masked is not None, \
+            "decode_masked needs a uniform cache batch axis"
+        logits, self.cache, expert_load = self._jit_masked(
+            self.params, jnp.asarray(tokens), self.cache,
+            jnp.asarray(mask, bool), self._rt_arrays())
         return logits, expert_load
 
     # -------------------------------------------------------------- paged

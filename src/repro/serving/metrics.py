@@ -23,6 +23,11 @@ class ServingMetrics:
     events: List[Dict] = field(default_factory=list)
     # per-interval decode throughput (for the fault-tolerance timeline)
     timeline: List[Dict] = field(default_factory=list)
+    # --- async expert tier (exec_mode="async" only; else empty) ---------
+    # per-micro-batch queueing delay: time waited behind other work on the
+    # micro-batch's expert server before service started — the first-class
+    # tail-latency signal the per-step model couldn't observe
+    queue_delays: List[float] = field(default_factory=list)
     # --- paged-KV counters (zero when the engine runs the dense cache) ---
     preemptions: int = 0               # slots evicted to recompute queue
     prefix_hit_blocks: int = 0         # cached blocks adopted at admission
@@ -72,6 +77,15 @@ class ServingMetrics:
     def ttft_stats(self) -> Dict[str, float]:
         return _latency_stats(self.ttfts)
 
+    @property
+    def p99_itl(self) -> float:
+        """Tail inter-token latency — the straggler-sensitivity headline
+        the async-vs-lockstep differential gates pin."""
+        return self.itl_stats()["p99"]
+
+    def queue_delay_stats(self) -> Dict[str, float]:
+        return _latency_stats(self.queue_delays)
+
     def throughput_curve(self, bin_width: float) -> List[Tuple[float, float]]:
         """Decode throughput per time bin: [(bin midpoint, tok/s), ...].
 
@@ -113,6 +127,12 @@ class ServingMetrics:
                         self.expert_imbalance,
                         self.peak_expert_imbalance],
         })
+        if self.queue_delays:
+            # async-only key, added conditionally so every lockstep
+            # fingerprint (including committed benchmark baselines) is
+            # byte-identical to the pre-async scheme
+            payload["queue"] = [round(float(q), ndigits)
+                                for q in self.queue_delays]
         blob = json.dumps(payload, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()
 
@@ -146,6 +166,13 @@ class ServingMetrics:
                 "preemptions": self.preemptions,
                 "evictions": self.kv_evictions,
                 "cow_forks": self.kv_cow_forks,
+            }
+        if self.queue_delays:
+            out["async"] = {
+                "micro_batches": len(self.queue_delays),
+                "queue_delay_ms": {
+                    k: round(v * 1e3, 3)
+                    for k, v in self.queue_delay_stats().items()},
             }
         return out
 
@@ -228,6 +255,17 @@ class ClusterMetrics:
     @property
     def itls(self) -> List[float]:
         return [t for c in self.per_client for t in c.itls]
+
+    @property
+    def queue_delays(self) -> List[float]:
+        return [q for c in self.per_client for q in c.queue_delays]
+
+    @property
+    def p99_itl(self) -> float:
+        return self.itl_stats()["p99"]
+
+    def queue_delay_stats(self) -> Dict[str, float]:
+        return _latency_stats(self.queue_delays)
 
     @property
     def preemptions(self) -> int:

@@ -36,7 +36,13 @@ The controller drives a narrow *host* interface — ``pool``, ``clk``,
 :class:`~repro.serving.engine.ServingEngine` (one executor) and
 :class:`~repro.serving.cluster.Cluster` (the same weight copies fanned out
 to every client's executor, so replicas never diverge across the
-front-end).
+front-end).  ``charge_migration`` is where the execution modes diverge:
+lockstep hosts advance their clock (the copy stalls the next step), async
+hosts occupy the expert tier's micro-batch queues instead
+(:meth:`~repro.serving.event_loop.AsyncExpertTier.occupy_all`) — chunks
+become events that interleave with in-flight micro-batches while the
+attention clients keep running, and the values migrated are identical
+either way (the ``migrate_slots == rebuild`` equivalence holds per chunk).
 """
 
 from __future__ import annotations

@@ -117,7 +117,7 @@ def sample_arrival_times(rate_fn: RateFn, horizon: float,
 class ScenarioEvent:
     t: float
     # fail | recover | rebalance | scale_to | set_policy | set_skew |
-    # fail_client | recover_client | set_frontend_policy
+    # slow_server | fail_client | recover_client | set_frontend_policy
     kind: str
     value: Optional[object] = None     # rank / client / pool size / policy
 
@@ -197,6 +197,17 @@ class Scenario:
 
     def recover(self, rank: int, t: float) -> "Scenario":
         self.events.append(ScenarioEvent(float(t), "recover", rank))
+        return self
+
+    def slow_server(self, rank: int, t: float,
+                    factor: float = 4.0) -> "Scenario":
+        """Expert server ``rank`` becomes a straggler at ``t``: its compute
+        runs ``factor``× slower until reset (``factor=1.0``).  Lockstep
+        engines wait for the slowest server every decode step; the async
+        tier slows only that server's micro-batch queue — the tail-latency
+        asymmetry the differential tests pin."""
+        self.events.append(ScenarioEvent(
+            float(t), "slow_server", (int(rank), float(factor))))
         return self
 
     def rebalance(self, t: float) -> "Scenario":
@@ -364,6 +375,8 @@ class Scenario:
             engine.scale_to(ev.value)
         elif ev.kind == "set_policy":
             engine.set_policy(ev.value)
+        elif ev.kind == "slow_server":
+            engine.set_server_speed(*ev.value)
         elif ev.kind in ("fail_client", "recover_client",
                          "set_frontend_policy"):
             if not hasattr(engine, "fail_client"):

@@ -136,6 +136,10 @@ class Scheduler:
         # slot -> sequence tokens already prefilled (present = mid-prefill,
         # i.e. NOT decode-ready); insertion order = admission order
         self._progress: Dict[int, int] = {}
+        # slots held out of decode planning while their wave is in flight
+        # (async exec mode: a dispatched slot must not be re-planned until
+        # its completion event lands)
+        self._held: set = set()
         self._last_was_prefill = False
         self.preemptions = 0
         if kv_pool is not None:
@@ -160,13 +164,23 @@ class Scheduler:
         """Free a slot whose request completed."""
         self.slots[slot] = None
         self._progress.pop(slot, None)
+        self._held.discard(slot)
         if self.kv is not None:
             self._release_slot_kv(slot)
+
+    def hold(self, slot: int) -> None:
+        """Exclude a slot from decode planning (its decode wave is in
+        flight on the async expert tier; the completion event unholds)."""
+        self._held.add(slot)
+
+    def unhold(self, slot: int) -> None:
+        self._held.discard(slot)
 
     # ------------------------------------------------------------ signals
     def decode_ready(self) -> List[int]:
         return [b for b, r in enumerate(self.slots)
-                if r is not None and b not in self._progress]
+                if r is not None and b not in self._progress
+                and b not in self._held]
 
     @staticmethod
     def _eff_len(req: Request) -> int:

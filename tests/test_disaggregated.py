@@ -57,6 +57,39 @@ def test_timeout_failover_transparent(cluster):
     np.testing.assert_allclose(y_ref, y_back, rtol=1e-4, atol=1e-4)
 
 
+def test_straggler_server_failover_transparent(cluster):
+    """A straggling server (slow_factor > client timeout) is
+    indistinguishable from a dead one to the timeout path: its rows
+    re-route to replicas and the layer output is unchanged — the
+    protocol-literal counterpart of the async tier's ``slow_server``
+    differential pins in test_async_engine.py.  Builds its own cluster:
+    the shared fixture's mapping has been failure-mutated by earlier
+    tests, which would leave server 0 with no routed rows."""
+    cfg, _ = cluster
+    clients, servers, smap, bank = build_cluster(
+        cfg, n_clients=2, n_servers=3, n_redundant=3)
+    for s in servers:
+        s.min_batch = 1
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(10, cfg.d_model)).astype(np.float32) * 0.3
+
+    def drive():
+        for s in servers:
+            s.tick()
+
+    y_ref = clients[1].moe_layer(x, drive)
+    servers[0].slow_factor = 50               # straggler: ~never serves
+    before = clients[1].retries
+    y_slow = clients[1].moe_layer(x, drive)
+    assert clients[1].retries > before        # timeout path fired
+    np.testing.assert_allclose(y_ref, y_slow, rtol=1e-4, atol=1e-4)
+    # back to full speed + re-register: served directly again
+    servers[0].slow_factor = 1
+    smap.mark_alive(0)
+    y_back = clients[1].moe_layer(x, drive)
+    np.testing.assert_allclose(y_ref, y_back, rtol=1e-4, atol=1e-4)
+
+
 def test_nonuniform_expert_counts(cluster):
     """EAAS does not require equal experts per server (paper §4.5)."""
     cfg, (clients, servers, smap, bank) = cluster

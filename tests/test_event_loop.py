@@ -1,0 +1,189 @@
+"""Unit battery for the discrete-event primitives under the async tier:
+the ``EventTimeline`` heap (ordering, tie-break, cancel, fingerprint) and
+the ``AsyncExpertTier`` micro-batch queues (FIFO service, conservation,
+failure re-dispatch, migration occupancy, resize).  The hypothesis
+property sweep over the same invariants lives in
+``test_property_event_loop.py``; this module keeps hypothesis-free
+coverage of every code path."""
+
+import numpy as np
+import pytest
+
+from repro.serving import AsyncExpertTier, EventTimeline
+
+# ---------------------------------------------------------------- timeline
+
+
+def test_timeline_pops_in_time_order():
+    tl = EventTimeline()
+    tl.post(0.3, "c")
+    tl.post(0.1, "a")
+    tl.post(0.2, "b")
+    assert [tl.pop().kind for _ in range(3)] == ["a", "b", "c"]
+    assert tl.pop() is None
+    assert tl.peek_time() is None
+
+
+def test_timeline_breaks_ties_by_post_order():
+    """Simultaneous events fire in the deterministic order they were
+    scheduled — the (time, seq) contract."""
+    tl = EventTimeline()
+    for i in range(5):
+        tl.post(1.0, f"k{i}")
+    assert [tl.pop().kind for _ in range(5)] == [f"k{i}" for i in range(5)]
+
+
+def test_timeline_cancel_skips_silently():
+    tl = EventTimeline()
+    keep = tl.post(0.1, "keep")
+    drop = tl.post(0.05, "drop")
+    tl.cancel(drop)
+    assert len(tl) == 1
+    assert tl.peek_time() == 0.1
+    assert tl.pop() is keep
+    # the log only records fired events
+    assert [e["kind"] for e in tl.log] == ["keep"]
+
+
+def test_timeline_clear_pending_keeps_log_and_seq():
+    tl = EventTimeline()
+    tl.post(0.1, "a")
+    tl.pop()
+    tl.post(0.2, "gone")
+    tl.clear_pending()
+    assert len(tl) == 0 and tl.pop() is None
+    assert [e["kind"] for e in tl.log] == ["a"]
+    # the seq counter survives the drop: later posts keep globally unique,
+    # monotone seqs (determinism across a client failure)
+    ev = tl.post(0.3, "b")
+    assert ev.seq == 2
+
+
+def test_timeline_fingerprint_replay_and_sensitivity():
+    def play(t_second):
+        tl = EventTimeline()
+        tl.post(0.1, "a", slot=1)
+        tl.post(t_second, "b", slot=2)
+        while tl.pop() is not None:
+            pass
+        return tl.fingerprint()
+
+    assert play(0.2) == play(0.2)            # same schedule, same hash
+    assert play(0.2) != play(0.25)           # a moved event changes it
+
+
+def test_timeline_log_keeps_scalar_payload_only():
+    tl = EventTimeline()
+    tl.post(0.1, "a", slot=3, req=object(), arr=np.zeros(2))
+    tl.pop()
+    assert tl.log[0]["slot"] == 3
+    assert "req" not in tl.log[0] and "arr" not in tl.log[0]
+
+
+# -------------------------------------------------------------------- tier
+
+
+def test_dispatch_skips_zero_work_servers():
+    tier = AsyncExpertTier(4)
+    mbs = tier.dispatch(0, 0, [1e-3, 0.0, 2e-3, 0.0], now=0.0)
+    assert [mb.server for mb in mbs] == [0, 2]
+    assert tier.enqueued == 2 and tier.in_flight() == 2
+
+
+def test_queue_is_fifo_and_work_conserving():
+    tier = AsyncExpertTier(1)
+    (a,) = tier.dispatch(0, 0, [1e-3], now=0.0)
+    (b,) = tier.dispatch(0, 1, [1e-3], now=0.0)
+    assert a.start_t == 0.0 and a.finish_t == pytest.approx(1e-3)
+    assert b.start_t == pytest.approx(a.finish_t)       # queued behind a
+    assert b.finish_t == pytest.approx(2e-3)
+    # an idle gap is not billed: dispatch after the frontier starts at now
+    (c,) = tier.dispatch(0, 2, [1e-3], now=5e-3)
+    assert c.start_t == 5e-3
+
+
+def test_slowdown_applies_to_new_work_only():
+    tier = AsyncExpertTier(1)
+    (a,) = tier.dispatch(0, 0, [1e-3], now=0.0)
+    tier.set_slowdown(0, 4.0)
+    (b,) = tier.dispatch(0, 1, [1e-3], now=0.0)
+    assert a.finish_t == pytest.approx(1e-3)            # committed time kept
+    assert b.finish_t == pytest.approx(1e-3 + 4e-3)     # stretched 4x
+    with pytest.raises(ValueError):
+        tier.set_slowdown(0, 0.0)
+    tier.set_slowdown(0, 1.0)                            # reset restores
+    (c,) = tier.dispatch(0, 2, [1e-3], now=b.finish_t)
+    assert c.finish_t - c.start_t == pytest.approx(1e-3)
+
+
+def test_fail_server_moves_queue_to_least_busy_survivor():
+    tier = AsyncExpertTier(3)
+    tier.dispatch(0, 0, [1e-3, 5e-3, 1e-3], now=0.0)
+    victims = [mb for mb in tier.mbs.values() if mb.server == 1]
+    (victim,) = victims
+    old_gen = victim.generation
+    moved = tier.fail_server(1, now=0.0)
+    assert moved == [victim]
+    assert victim.server in (0, 2)          # least busy survivor, tie -> 0
+    assert victim.server == 0 or victim.start_t > 0.0
+    assert victim.generation == old_gen + 1
+    # the stale completion event (old generation) is no longer current
+    assert not tier.is_current(victim.mb_id, old_gen)
+    assert tier.is_current(victim.mb_id, victim.generation)
+    assert tier.redispatched == 1
+    assert tier.in_flight() == 3            # nothing lost, nothing done
+
+
+def test_fail_without_survivors_cancels_explicitly():
+    tier = AsyncExpertTier(1)
+    tier.dispatch(0, 0, [1e-3], now=0.0)
+    moved = tier.fail_server(0, now=0.0)
+    assert moved == []
+    assert tier.cancelled == 1 and tier.in_flight() == 0
+
+
+def test_conservation_counters_balance():
+    tier = AsyncExpertTier(2)
+    mbs = tier.dispatch(0, 0, [1e-3, 1e-3], now=0.0)
+    tier.mark_done(mbs[0])
+    tier.fail_server(1, now=0.0)            # moves mbs[1] to server 0
+    assert tier.enqueued == 2
+    assert tier.enqueued == tier.completed + tier.cancelled \
+        + tier.in_flight()
+    tier.mark_done(mbs[1])
+    assert tier.in_flight() == 0
+    assert tier.queues[0].drained == 2      # both ultimately served by 0
+
+
+def test_occupy_all_busies_alive_servers_only():
+    tier = AsyncExpertTier(2)
+    tier.fail_server(1, now=0.0)
+    tier.occupy_all(now=1.0, dt=0.5)
+    assert tier.queues[0].busy_until == pytest.approx(1.5)
+    assert tier.queues[1].busy_until == 0.0           # dead: not occupied
+    assert tier.migration_busy == pytest.approx(0.5)
+    # the next dispatch queues behind the weight copy
+    (mb,) = tier.dispatch(0, 1, [1e-3, 0.0], now=1.0)
+    assert mb.start_t == pytest.approx(1.5)
+
+
+def test_resize_resets_queues_from_now():
+    tier = AsyncExpertTier(2)
+    tier.dispatch(0, 0, [1e-3, 1e-3], now=0.0)
+    tier.set_slowdown(0, 4.0)
+    tier.resize(3, now=2.0)
+    assert tier.num_servers == 3
+    assert all(q.alive and q.slowdown == 1.0 for q in tier.queues)
+    assert all(q.busy_until == 2.0 for q in tier.queues)
+
+
+def test_cancel_client_abandons_only_that_clients_work():
+    tier = AsyncExpertTier(2)
+    tier.dispatch(0, 0, [1e-3, 1e-3], now=0.0)
+    mbs1 = tier.dispatch(1, 1, [1e-3, 1e-3], now=0.0)
+    assert tier.cancel_client(0) == 2
+    assert tier.cancelled == 2 and tier.in_flight() == 2
+    assert all(not mb.cancelled for mb in mbs1)
+    # a cancelled micro-batch's completion event is stale
+    dead = [mb for mb in tier.mbs.values() if mb.client_id == 0]
+    assert all(not tier.is_current(mb.mb_id, mb.generation) for mb in dead)
