@@ -765,14 +765,23 @@ class ServingEngine:
         """Counting in-flight sampled tokens, will slot ``b`` be done when
         its last wave lands?  Mirrors the lockstep done-check exactly, so
         a slot is never dispatched past its final token even though that
-        token hasn't been committed yet."""
+        token hasn't been committed yet.
+
+        A slot with *no* wave in flight is never exhausted: lockstep
+        always decodes a ready slot and runs the done check only after
+        appending — even when the prefill-sampled first token already
+        meets the done condition (max_new_tokens=1, or EOS sampled at
+        prefill) it decodes exactly once more and releases at the check.
+        Holding a pend-empty slot instead would park it forever: with no
+        wave in flight there is no completion event left to release it,
+        and its token stream would diverge from lockstep's."""
         pend = self._slot_pending(b)
+        if not pend:
+            return False
         count = len(r.output_tokens) + len(pend)
-        last = pend[-1] if pend else (
-            r.output_tokens[-1] if r.output_tokens else None)
         return (count >= r.sampling.max_new_tokens
                 or (self.ecfg.eos_token is not None
-                    and last == self.ecfg.eos_token)
+                    and pend[-1] == self.ecfg.eos_token)
                 or len(r.prompt) + count >= self.ecfg.max_seq - 1)
 
     def _async_decode(self, plan: DecodeBatch) -> bool:
@@ -791,7 +800,8 @@ class ServingEngine:
         for b in plan.slots:
             r = sch.slots[b]
             if self._slot_exhausted(b, r):
-                # park it until its final wave's completion releases it
+                # park it until its final (in-flight, _slot_exhausted
+                # guarantees one) wave's completion releases it
                 sch.hold(b)
             else:
                 active.append(b)

@@ -91,6 +91,10 @@ class AsyncExpertTier:
     def __init__(self, num_servers: int):
         self.queues: List[ServerQueue] = [ServerQueue(s)
                                           for s in range(num_servers)]
+        # in-flight micro-batches only: retired (done/cancelled) entries
+        # are pruned at retirement, so memory stays bounded by in-flight
+        # work and the failure/cancel scans are O(in-flight), not
+        # O(all-time micro-batches)
         self.mbs: Dict[int, MicroBatch] = {}
         self._next_id = 0
         self.enqueued = 0
@@ -135,7 +139,8 @@ class AsyncExpertTier:
 
     def is_current(self, mb_id: int, generation: int) -> bool:
         """True when a completion event for (mb_id, generation) is still
-        valid — not re-dispatched since, not cancelled, not already done."""
+        valid — not re-dispatched since, not cancelled, not already done
+        (retired entries are pruned, so a missing id is simply stale)."""
         mb = self.mbs.get(mb_id)
         return (mb is not None and not mb.cancelled and not mb.done
                 and mb.generation == generation)
@@ -144,6 +149,9 @@ class AsyncExpertTier:
         mb.done = True
         self.queues[mb.server].drained += 1
         self.completed += 1
+        # retire: any duplicate/stale-generation event still in a timeline
+        # resolves to "not current" via the missing id
+        self.mbs.pop(mb.mb_id, None)
 
     # ------------------------------------------------------------- faults
     def fail_server(self, rank: int, now: float) -> List[MicroBatch]:
@@ -166,9 +174,12 @@ class AsyncExpertTier:
             survivors = [t for t in self.queues if t.alive]
             if not survivors:
                 # nobody can serve it: the wave will be completed by the
-                # engine's degenerate path; count the loss explicitly
+                # engine's degenerate path; count the loss explicitly and
+                # retire the entry (engines see the missing id as
+                # cancelled when reconciling their waves)
                 mb.cancelled = True
                 self.cancelled += 1
+                self.mbs.pop(mb.mb_id, None)
                 continue
             target = min(survivors, key=lambda t: (t.busy_until, t.rank))
             mb.generation += 1
@@ -199,11 +210,12 @@ class AsyncExpertTier:
         servers finish the dispatched compute and discard the results —
         dispatched work cannot be clawed back, so the occupancy stays)."""
         n = 0
-        for mb in self.mbs.values():
+        for mb in list(self.mbs.values()):
             if mb.client_id == client_id and not mb.done \
                     and not mb.cancelled:
                 mb.cancelled = True
                 self.cancelled += 1
+                self.mbs.pop(mb.mb_id, None)
                 n += 1
         return n
 

@@ -213,6 +213,47 @@ def test_shifting_hot_set_completes_deterministically(cfg):
     assert res_a.metrics.fingerprint() == res_b.metrics.fingerprint()
 
 
+def test_max_new_tokens_1_matches_lockstep_and_drains(cfg):
+    """Regression: with ``max_new_tokens=1`` the prefill-sampled first
+    token already satisfies the done condition.  Lockstep still decodes
+    each ready slot exactly once and releases it at the post-append done
+    check; async must dispatch those slots the same way rather than hold
+    them with no wave in flight — held-forever slots were zombies that
+    filled the batch and starved serving (0 completions), and the
+    one-token streams diverged from lockstep's two-token streams."""
+    def make():
+        return (Scenario(horizon=0.06, seed=21, prompt_len=8, max_new=1,
+                         vocab=cfg.vocab_size).poisson(rate=100))
+    res_l = make().run(_engine(cfg, "lockstep"))
+    res_a = make().run(_engine(cfg, "async"))
+    assert res_l.metrics.completed == res_l.metrics.total_requests > 0
+    assert res_a.metrics.completed == res_a.metrics.total_requests
+    assert _tokens(res_l) == _tokens(res_a)
+
+
+def test_prefill_sampled_eos_matches_lockstep(cfg):
+    """Regression, EOS flavour: pick an ``eos_token`` a request provably
+    samples at *prefill* time (probed from an eos-free lockstep run —
+    first-token sampling keys depend only on the request id, so the probe
+    transfers).  Lockstep's done check never inspects the prefill token,
+    so such a request keeps decoding; async must not hold its pend-empty
+    slot either — streams stay bitwise identical and everything drains."""
+    def make():
+        return (Scenario(horizon=0.05, seed=23, prompt_len=8, max_new=6,
+                         vocab=cfg.vocab_size).poisson(rate=80))
+    probe = make().run(_engine(cfg, "lockstep"))
+    eos = int(min(probe.requests,
+                  key=lambda r: r.request_id).output_tokens[0])
+    res_l = make().run(_engine(cfg, "lockstep", eos_token=eos))
+    res_a = make().run(_engine(cfg, "async", eos_token=eos))
+    # the edge case actually triggered: some request's first token is EOS
+    assert any(r.output_tokens and r.output_tokens[0] == eos
+               for r in res_l.requests)
+    assert res_l.metrics.completed == res_l.metrics.total_requests > 0
+    assert res_a.metrics.completed == res_a.metrics.total_requests
+    assert _tokens(res_l) == _tokens(res_a)
+
+
 # ----------------------------------------------------------------- faults
 
 def test_fail_server_mid_drain_redispatches_without_token_loss(cfg):

@@ -140,6 +140,7 @@ def test_fail_without_survivors_cancels_explicitly():
     moved = tier.fail_server(0, now=0.0)
     assert moved == []
     assert tier.cancelled == 1 and tier.in_flight() == 0
+    assert tier.mbs == {}                   # retired entry pruned
 
 
 def test_conservation_counters_balance():
@@ -153,6 +154,9 @@ def test_conservation_counters_balance():
     tier.mark_done(mbs[1])
     assert tier.in_flight() == 0
     assert tier.queues[0].drained == 2      # both ultimately served by 0
+    # retired entries are pruned: mbs holds in-flight work only, so
+    # memory stays bounded and fault scans are O(in-flight)
+    assert tier.mbs == {}
 
 
 def test_occupy_all_busies_alive_servers_only():
@@ -179,11 +183,14 @@ def test_resize_resets_queues_from_now():
 
 def test_cancel_client_abandons_only_that_clients_work():
     tier = AsyncExpertTier(2)
-    tier.dispatch(0, 0, [1e-3, 1e-3], now=0.0)
+    mbs0 = tier.dispatch(0, 0, [1e-3, 1e-3], now=0.0)
     mbs1 = tier.dispatch(1, 1, [1e-3, 1e-3], now=0.0)
     assert tier.cancel_client(0) == 2
     assert tier.cancelled == 2 and tier.in_flight() == 2
     assert all(not mb.cancelled for mb in mbs1)
-    # a cancelled micro-batch's completion event is stale
-    dead = [mb for mb in tier.mbs.values() if mb.client_id == 0]
-    assert all(not tier.is_current(mb.mb_id, mb.generation) for mb in dead)
+    # a cancelled micro-batch is retired outright: its entry is pruned
+    # and its still-queued completion event resolves to "not current"
+    assert all(mb.cancelled for mb in mbs0)
+    assert all(mb.mb_id not in tier.mbs for mb in mbs0)
+    assert all(not tier.is_current(mb.mb_id, mb.generation) for mb in mbs0)
+    assert all(mb.mb_id in tier.mbs for mb in mbs1)

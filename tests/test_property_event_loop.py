@@ -103,6 +103,9 @@ def test_tier_conservation_under_random_operations(seed, servers, waves):
         assert tier.in_flight() >= 0
         assert tier.enqueued == tier.completed + tier.cancelled \
             + tier.in_flight()
+        # retired entries are pruned at retirement: the mb table holds
+        # exactly the in-flight work (bounded memory under any schedule)
+        assert len(tier.mbs) == tier.in_flight()
     # every re-dispatched batch still respects causality
     for mb in tier.mbs.values():
         assert mb.finish_t >= mb.start_t >= mb.enqueue_t
