@@ -14,9 +14,19 @@ One seeded request trace replayed under ``EngineConfig.exec_mode``
   — the p99 ITL gap is the paper's tail-latency claim, and the headline
   gate (``async_p99_beats_lockstep_straggler``).
 
+* ``async_hot_server`` / ``async_hot_lanes`` — Zipf(1.2)-skewed expert
+  traffic with a straggler on a hot expert's server, replayed with the
+  aggregate per-server FIFO (``queue_mode="server"``) and with per-expert
+  queue lanes (``queue_mode="expert"``, service budget 2): cold
+  co-located experts overlap the hot lane's backlog instead of
+  serializing behind it — lanes must win on throughput AND p99 ITL
+  (``lanes_beat_server_*``), with identical token streams.
+
 The full (non-smoke) run adds a saturated bursty-trace pair and the
-``async_depth=1`` ablation (strict wave-at-a-time: identity holds and the
-cadence collapses back to lockstep — the pipelining win is depth >= 2).
+depth sweep: ``async_depth1`` (strict wave-at-a-time: identity holds and
+the cadence collapses back to lockstep — the pipelining win is
+depth >= 2) and ``async_depth4`` (deeper speculative pipelining keeps
+identity and never loses throughput).
 
 Deterministic under the virtual clock: every number in the JSON is exactly
 reproducible, so the ``gate`` section (consumed by ``tools/check_bench.py``
@@ -27,6 +37,7 @@ p99 win exactly and throughputs within tolerance.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import hashlib
 from typing import Dict, List
 
@@ -38,6 +49,12 @@ NUM_SERVERS = 4
 MAX_BATCH = 4
 STRAGGLER_RANK = 1
 STRAGGLER_FACTOR = 6.0
+# the hot-expert pair: a wider expert pool under moderate Zipf bias (so
+# several lanes stay live per server) and a straggler on a hot server
+HOT_EXPERTS = 16
+HOT_ZIPF_ALPHA, HOT_ZIPF_SCALE = 1.2, 0.5
+HOT_STRAGGLER_RANK = 3
+LANE_BUDGET = 2
 
 
 def _clock() -> VirtualClock:
@@ -62,6 +79,15 @@ def _token_fingerprint(tokens: Dict[int, tuple]) -> str:
     return hashlib.sha256(blob).hexdigest()[:16]
 
 
+def _hot_engine(cfg, queue_mode: str) -> ServingEngine:
+    ecfg = EngineConfig(
+        mode="eaas", num_servers=NUM_SERVERS, max_batch=8, max_seq=64,
+        n_redundant=2, pool_tokens_per_client=32,
+        charge_imbalance=True,            # heat costs time, lanes see it
+        exec_mode="async", queue_mode=queue_mode, lane_budget=LANE_BUDGET)
+    return ServingEngine(cfg, ecfg, seed=0, clock=_clock())
+
+
 def _measure(eng: ServingEngine, sc: Scenario) -> Dict:
     res = sc.run(eng)
     m = res.metrics
@@ -79,6 +105,11 @@ def _measure(eng: ServingEngine, sc: Scenario) -> Dict:
         out["micro_batches"] = eng.tier.completed
         out["queue_delay"] = m.queue_delay_stats()
         out["fired_events"] = len(eng.timeline.log)
+        if eng.ecfg.queue_mode == "expert":
+            out["queue_delay_by_server"] = {
+                k: round(v["p99"], 6)
+                for k, v in m.queue_delay_stats(by="server").items()}
+            out["live_lanes"] = sum(1 for _ in eng.tier.lanes())
     return out
 
 
@@ -97,6 +128,17 @@ def run(horizon: float = 0.5, rate: float = 100.0, max_new: int = 12,
         return plain().slow_server(STRAGGLER_RANK, t=horizon / 20,
                                    factor=STRAGGLER_FACTOR)
 
+    hot_cfg = cfg.replace(moe=dataclasses.replace(
+        cfg.moe, num_experts=HOT_EXPERTS))
+
+    def hot():
+        return (Scenario(horizon=horizon, seed=19, prompt_len=8,
+                         max_new=max_new, vocab=V)
+                .poisson(rate=rate * 0.8)
+                .zipf_skew(alpha=HOT_ZIPF_ALPHA, scale=HOT_ZIPF_SCALE)
+                .slow_server(HOT_STRAGGLER_RANK, t=horizon / 20,
+                             factor=STRAGGLER_FACTOR))
+
     variants: Dict[str, Dict] = {}
     variants["lockstep"] = _measure(_engine(cfg, "lockstep"), plain())
     variants["async"] = _measure(_engine(cfg, "async"), plain())
@@ -104,6 +146,10 @@ def run(horizon: float = 0.5, rate: float = 100.0, max_new: int = 12,
                                               straggled())
     variants["async_straggler"] = _measure(_engine(cfg, "async"),
                                            straggled())
+    variants["async_hot_server"] = _measure(_hot_engine(hot_cfg, "server"),
+                                            hot())
+    variants["async_hot_lanes"] = _measure(_hot_engine(hot_cfg, "expert"),
+                                           hot())
 
     if not smoke:
         def bursty():
@@ -117,20 +163,31 @@ def run(horizon: float = 0.5, rate: float = 100.0, max_new: int = 12,
                                             bursty())
         variants["async_depth1"] = _measure(
             _engine(cfg, "async", async_depth=1), plain())
+        variants["async_depth4"] = _measure(
+            _engine(cfg, "async", async_depth=4), plain())
 
     lk, an = variants["lockstep"], variants["async"]
     lks, ans = variants["lockstep_straggler"], variants["async_straggler"]
+    hs, hl = variants["async_hot_server"], variants["async_hot_lanes"]
     out: Dict = {"figure": "async_tier", "smoke": smoke,
                  "num_servers": NUM_SERVERS,
                  "straggler": {"rank": STRAGGLER_RANK,
                                "factor": STRAGGLER_FACTOR},
+                 "hot": {"experts": HOT_EXPERTS, "alpha": HOT_ZIPF_ALPHA,
+                         "scale": HOT_ZIPF_SCALE,
+                         "straggler_rank": HOT_STRAGGLER_RANK,
+                         "lane_budget": LANE_BUDGET},
                  "variants": {}}
     out["tokens_identical_plain"] = lk["_tokens"] == an["_tokens"]
     out["tokens_identical_straggler"] = lks["_tokens"] == ans["_tokens"]
+    out["tokens_identical_hot"] = hs["_tokens"] == hl["_tokens"]
     out["async_speedup_plain"] = (an["decode_tok_per_s"]
                                   / max(lk["decode_tok_per_s"], 1e-9))
     out["straggler_p99_ratio"] = (ans["p99_itl_s"]
                                   / max(lks["p99_itl_s"], 1e-12))
+    out["hot_lane_speedup"] = (hl["decode_tok_per_s"]
+                               / max(hs["decode_tok_per_s"], 1e-9))
+    out["hot_p99_ratio"] = hl["p99_itl_s"] / max(hs["p99_itl_s"], 1e-12)
     for name, v in variants.items():
         out["variants"][name] = {k: val for k, val in v.items()
                                  if k != "_tokens"}
@@ -141,13 +198,18 @@ def run(horizon: float = 0.5, rate: float = 100.0, max_new: int = 12,
             "tokens_identical_plain": out["tokens_identical_plain"],
             "tokens_identical_straggler":
                 out["tokens_identical_straggler"],
+            "tokens_identical_hot": out["tokens_identical_hot"],
             "token_fingerprint_async": an["token_fingerprint"],
+            "token_fingerprint_hot": hl["token_fingerprint"],
             # the headline claims, pinned as booleans (the ratios below
             # track the margins within tolerance)
             "async_p99_beats_lockstep_straggler":
                 ans["p99_itl_s"] < lks["p99_itl_s"],
             "async_throughput_not_worse":
                 an["decode_tok_per_s"] >= lk["decode_tok_per_s"],
+            "lanes_beat_server_throughput":
+                hl["decode_tok_per_s"] >= hs["decode_tok_per_s"],
+            "lanes_beat_server_p99": hl["p99_itl_s"] < hs["p99_itl_s"],
         },
         "tolerance": {
             "tok_per_s_lockstep": lk["decode_tok_per_s"],
@@ -155,8 +217,22 @@ def run(horizon: float = 0.5, rate: float = 100.0, max_new: int = 12,
             "p99_itl_lockstep_straggler": lks["p99_itl_s"],
             "p99_itl_async_straggler": ans["p99_itl_s"],
             "straggler_p99_ratio": out["straggler_p99_ratio"],
+            "tok_per_s_hot_server": hs["decode_tok_per_s"],
+            "tok_per_s_hot_lanes": hl["decode_tok_per_s"],
+            "p99_itl_hot_server": hs["p99_itl_s"],
+            "p99_itl_hot_lanes": hl["p99_itl_s"],
+            "hot_p99_ratio": out["hot_p99_ratio"],
+            "queue_delay_p99_hot_lanes": hl["queue_delay"]["p99"],
         },
     }
+    if not smoke:
+        d1, d4 = variants["async_depth1"], variants["async_depth4"]
+        out["gate"]["exact"]["tokens_identical_depth1"] = \
+            d1["_tokens"] == lk["_tokens"]
+        out["gate"]["exact"]["tokens_identical_depth4"] = \
+            d4["_tokens"] == lk["_tokens"]
+        out["gate"]["exact"]["depth4_throughput_not_worse"] = \
+            d4["decode_tok_per_s"] >= d1["decode_tok_per_s"]
     save_result("async_tier", out)
     return out
 
@@ -174,6 +250,8 @@ def main() -> List[str]:
         "async_tier_summary", 0.0,
         f"speedup=x{res['async_speedup_plain']:.3f}"
         f";straggler_p99_ratio={res['straggler_p99_ratio']:.3f}"
+        f";hot_lane_speedup=x{res['hot_lane_speedup']:.3f}"
+        f";hot_p99_ratio={res['hot_p99_ratio']:.3f}"
         f";identical={int(res['tokens_identical_plain'])}"))
     return rows
 
@@ -191,3 +269,7 @@ if __name__ == "__main__":
           f"p99 ratio {res['straggler_p99_ratio']:.3f} (identical="
           f"{res['tokens_identical_plain']}/"
           f"{res['tokens_identical_straggler']})")
+    print(f"hot-expert lanes vs server queue: speedup "
+          f"x{res['hot_lane_speedup']:.3f}, p99 ratio "
+          f"{res['hot_p99_ratio']:.3f} (identical="
+          f"{res['tokens_identical_hot']})")

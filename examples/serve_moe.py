@@ -10,6 +10,9 @@ Run:  PYTHONPATH=src python examples/serve_moe.py [--requests 16]
           [--kv-blocks 13]    # paged KV; small pools exercise preemption
       PYTHONPATH=src python examples/serve_moe.py --clients 4 \
           --fail-client 1     # strand one client's work mid-run
+      PYTHONPATH=src python examples/serve_moe.py --exec-mode async \
+          --async-depth 4     # event-driven expert tier, depth-K waves
+                              # (switches to the deterministic VirtualClock)
 """
 
 import argparse
@@ -18,7 +21,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.serving import (Cluster, ClusterConfig, EngineConfig, Request,
-                           SamplingParams)
+                           SamplingParams, VirtualClock)
 from repro.serving.frontend import FRONTEND_POLICIES
 from repro.training.data import ShareGPTLike
 
@@ -41,6 +44,16 @@ def main():
     ap.add_argument("--kv-blocks", type=int, default=None,
                     help="pool size in blocks (default: no memory pressure; "
                          "shrink to exercise admission gating + preemption)")
+    ap.add_argument("--exec-mode", default="lockstep",
+                    choices=["lockstep", "async"],
+                    help="async = event-driven expert tier (per-expert "
+                         "queue lanes, depth-K wave pipelining); runs under "
+                         "the deterministic VirtualClock — token streams "
+                         "are bitwise identical to lockstep")
+    ap.add_argument("--async-depth", type=int, default=2,
+                    help="decode waves in flight under --exec-mode async "
+                         "(1 = lockstep cadence, 2 = ping-pong, K = deeper "
+                         "speculative pipelining)")
     args = ap.parse_args()
 
     cfg = get_config("deepseek-r1").reduced()
@@ -48,12 +61,20 @@ def main():
                         max_seq=96, n_redundant=2,
                         kv_mode=args.kv_mode, kv_block_size=8,
                         kv_num_blocks=args.kv_blocks,
+                        exec_mode=args.exec_mode,
+                        async_depth=args.async_depth,
                         # paged prefill runs the chunk path; chunking also
                         # bounds decode gaps while long prompts admit
                         prefill_chunk=(8 if args.kv_mode == "paged" else 0))
+    if args.exec_mode == "async" and args.kv_mode != "dense":
+        ap.error("--exec-mode async supports --kv-mode dense only")
+    # the async event timeline is defined against the deterministic
+    # virtual cost model; lockstep keeps the wall clock (the seed default)
+    clock_factory = VirtualClock if args.exec_mode == "async" else None
     cluster = Cluster(cfg, ClusterConfig(clients=args.clients,
                                          frontend_policy=args.frontend_policy,
-                                         engine=ecfg), seed=0)
+                                         engine=ecfg), seed=0,
+                      clock_factory=clock_factory)
 
     # ShareGPT-like workload (bucketed prompt lengths bound prefill compiles)
     dist = ShareGPTLike(seed=0)

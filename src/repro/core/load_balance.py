@@ -165,6 +165,36 @@ def server_loads(load: np.ndarray, mapping: np.ndarray, num_servers: int,
     return out
 
 
+def lane_loads(load: np.ndarray, mapping: np.ndarray, num_servers: int,
+               alive: Optional[np.ndarray] = None,
+               capacities: Optional[np.ndarray] = None) -> np.ndarray:
+    """(S, E) per-(server, expert) load decomposition under the same client
+    spreading policy as :func:`server_loads`: column ``e`` spreads
+    ``load[e]`` uniformly over its alive replicas (capacity-proportionally
+    when ``capacities`` is given), so each row sums to that server's
+    :func:`server_loads` entry.  This is the async tier's per-expert queue
+    *lane* decomposition — which expert's lane each server-second of a
+    dispatched wave belongs to."""
+    load = np.asarray(load, np.float64)
+    ok = (np.ones(num_servers, bool) if alive is None
+          else np.asarray(alive, bool))
+    cap = (None if capacities is None
+           else np.asarray(capacities, np.float64))
+    out = np.zeros((num_servers, load.shape[0]), np.float64)
+    for e in range(load.shape[0]):
+        reps = [int(s) for s in mapping[e] if s >= 0 and ok[s]]
+        if not reps:
+            continue
+        if cap is None:
+            for s in reps:
+                out[s, e] += load[e] / len(reps)
+        else:
+            total = sum(cap[s] for s in reps)
+            for s in reps:
+                out[s, e] += load[e] * cap[s] / max(total, 1e-12)
+    return out
+
+
 def imbalance(load: np.ndarray, mapping: np.ndarray, num_servers: int,
               alive: Optional[np.ndarray] = None,
               capacities: Optional[np.ndarray] = None) -> float:

@@ -9,6 +9,11 @@ Usage:
 ``--clients N`` runs the paper's M:N attention:expert shape through
 :class:`repro.serving.Cluster`; ``--mode tp`` has no disaggregated expert
 tier and therefore only supports a single client.
+
+``--exec-mode async`` serves through the event-driven expert tier
+(per-expert queue lanes, ``--async-depth`` pipelined decode waves) under
+the deterministic :class:`~repro.serving.clock.VirtualClock` — token
+streams are bitwise identical to lockstep, only the timing model changes.
 """
 
 from __future__ import annotations
@@ -20,7 +25,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.serving import (Cluster, ClusterConfig, EngineConfig, Request,
-                           SamplingParams, ServingEngine)
+                           SamplingParams, ServingEngine, VirtualClock)
 from repro.serving.frontend import FRONTEND_POLICIES
 
 
@@ -40,6 +45,15 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--fail-at", default=None,
                     help="step:rank — inject an expert-server failure")
+    ap.add_argument("--exec-mode", default="lockstep",
+                    choices=["lockstep", "async"],
+                    help="async = event-driven expert tier with per-expert "
+                         "queue lanes (needs --mode eaas and an MoE arch; "
+                         "runs under the deterministic VirtualClock)")
+    ap.add_argument("--async-depth", type=int, default=2,
+                    help="decode waves in flight under --exec-mode async "
+                         "(1 = lockstep cadence, K = deeper speculative "
+                         "wave pipelining)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -49,7 +63,16 @@ def main() -> None:
     ecfg = EngineConfig(mode=args.mode, num_servers=args.servers,
                         max_batch=args.max_batch, max_seq=96,
                         n_redundant=2,
+                        exec_mode=args.exec_mode,
+                        async_depth=args.async_depth,
                         tp_batch_cap=max(args.max_batch // 2, 1))
+    if args.exec_mode == "async" and (args.mode != "eaas" or not cfg.moe):
+        # surface the engine's own validation as a CLI error
+        raise SystemExit("--exec-mode async models the EAAS expert tier: "
+                         "it needs --mode eaas and an MoE arch")
+    # the async event timeline is defined against the deterministic
+    # virtual cost model; lockstep keeps the wall clock (the seed default)
+    clock_factory = VirtualClock if args.exec_mode == "async" else None
     if args.mode == "tp" or not cfg.moe:
         if args.clients != 1:
             raise SystemExit("--clients > 1 needs a shared expert tier: "
@@ -58,7 +81,7 @@ def main() -> None:
     else:
         system = Cluster(cfg, ClusterConfig(
             clients=args.clients, frontend_policy=args.frontend_policy,
-            engine=ecfg), seed=0)
+            engine=ecfg), seed=0, clock_factory=clock_factory)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         system.submit(Request(

@@ -128,6 +128,13 @@ class VirtualClock(Clock):
     # the chunk size trades adaptation speed against decode interference
     migrate_base: float = 1e-3
     migrate_per_expert: float = 2e-3
+    # lane-granular busy accounting (async tier, queue_mode="expert"): a
+    # fixed per-lane-micro-batch dispatch overhead added to each expert
+    # lane's service time when a wave splits into more than one lane on a
+    # server.  Finer lanes buy overlap but are not free — 0.0 (the
+    # default) keeps lane-mode timings bit-identical to the aggregate
+    # per-server dispatch at lane_budget=1.
+    lane_overhead: float = 0.0
 
     def start(self) -> None:  # nothing to measure
         pass

@@ -121,7 +121,9 @@ class Cluster:
         # (charge_contention's analytic stretch is not applied on top)
         self._tier: Optional[AsyncExpertTier] = None
         if ecfg.exec_mode == "async":
-            self._tier = AsyncExpertTier(ecfg.num_servers)
+            self._tier = AsyncExpertTier(ecfg.num_servers,
+                                         queue_mode=ecfg.queue_mode,
+                                         lane_budget=ecfg.lane_budget)
         # ---- N clients over per-client mapping views --------------------
         # all clients share the initial params (same seed -> the cluster is
         # N replicas of one model; migrations keep every copy in lockstep
@@ -150,7 +152,8 @@ class Cluster:
                 interval=ecfg.rebalance_interval,
                 chunk=ecfg.rebalance_chunk,
                 min_gain=ecfg.rebalance_min_gain,
-                cooldown=ecfg.rebalance_cooldown))
+                cooldown=ecfg.rebalance_cooldown,
+                queue_aware=ecfg.rebalance_queue_aware))
             for eng in self.clients:
                 # members surface the pool imbalance gauge the cluster's
                 # controller plans from (their own rebalancer stays None)
@@ -388,6 +391,14 @@ class Cluster:
             if self.client_alive[i]:
                 eng.clock += dt
 
+    def queue_signals(self) -> Optional[Dict]:
+        """Live queue signals of the SHARED async tier at cluster time —
+        the cluster-level queue-aware rebalance gate reads this (None
+        under lockstep)."""
+        if self._tier is None:
+            return None
+        return self._tier.queue_signals(self.clock)
+
     def rebalance(self) -> None:
         """One-shot EPLB replan of the shared tier (scenario event)."""
         if self.rebalancer is not None:
@@ -409,7 +420,16 @@ class Cluster:
             eng.executor.resize(eng.pool)    # the client's PoolClient view
             eng.server_speed = np.ones(n)
         if self._tier is not None:
-            self._tier.resize(n, self.clock)
+            # reconcile the shared tier: work still queued on dropped
+            # ranks re-dispatches to survivors, and each moved
+            # micro-batch's fresh completion event is fanned to the
+            # client that owns it (mirrors inject_server_failure)
+            moved = self._tier.resize(n, self.clock)
+            for mb in moved:
+                self.clients[mb.client_id]._post_redispatch(mb)
+            for eng in self.clients:
+                eng._reconcile_waves()
+            self._tier.reset_speeds()        # match the server_speed reset
         self.last_placement_change = self.clock
         self._pool_event("scale", **{"from": old, "to": n})
 

@@ -64,7 +64,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.elastic import ServerPool
-from repro.core.load_balance import server_loads
+from repro.core.load_balance import lane_loads, server_loads
 from repro.core.monitor import Monitor
 from repro.models.transformer import build_model
 from repro.serving.clock import (Clock, Event, EventTimeline, VirtualClock,
@@ -111,12 +111,30 @@ class EngineConfig:
     # async needs mode="eaas" + MoE, kv_mode="dense",
     # decode_mode="lockstep", a VirtualClock and a decoder-family model.
     exec_mode: str = "lockstep"
-    # decode waves in flight under exec_mode="async" (ping-pong double
-    # buffering): wave k+1 dispatches on wave k's eagerly-sampled tokens
-    # before k's combine lands, so the client's attention share overlaps
-    # the tier's expert share.  1 = strict wave-at-a-time (the cadence then
-    # equals lockstep exactly; useful for ablation).
+    # decode waves in flight under exec_mode="async" (depth-K speculative
+    # pipelining): wave k+K dispatches on wave k+K-1's eagerly-sampled
+    # tokens before the elder combines land, so the client's attention
+    # share overlaps up to K expert phases.  1 = strict wave-at-a-time
+    # (the cadence then equals lockstep exactly; useful for ablation),
+    # 2 = the classic ping-pong double buffer.  Token streams stay
+    # bitwise identical to lockstep at every depth — the _slot_exhausted
+    # eager done-predicate plus event cancellation keep deep pipelines
+    # from running a slot past its final token.
     async_depth: int = 2
+    # async-tier queueing discipline: "expert" (default) drains per-expert
+    # lanes — a Zipf-hot expert queues only in its own lane while cold
+    # co-located experts keep flowing; "server" funnels each server's
+    # whole share through one aggregate FIFO (the pre-lane behaviour).
+    queue_mode: str = "expert"
+    # per-server service-stream budget (queue lanes overlap up to this
+    # width on one server).  1 (default) keeps service order — and hence
+    # every committed timing — bit-identical to the single-FIFO tier.
+    lane_budget: int = 1
+    # let the live rebalance controller read the async tier's measured
+    # queue backlog: migrations are gated on a modeled queue-delay
+    # reduction instead of the routed-count imbalance alone.  No-op under
+    # lockstep (there is no tier to observe).
+    rebalance_queue_aware: bool = True
     # dispatch-buffer sizing override (tokens per client step); default is
     # max_batch, the seed behaviour — raise it when prefill chunks carry
     # more tokens than a decode batch so fixed-capacity buffers don't drop
@@ -196,10 +214,19 @@ class ServingEngine:
                 raise ValueError(
                     "exec_mode='async' needs a VirtualClock: the event "
                     "timeline is a deterministic modeled-cost timeline")
-            if engine_cfg.async_depth < 1:
+            if (not isinstance(engine_cfg.async_depth, (int, np.integer))
+                    or engine_cfg.async_depth < 1):
                 raise ValueError(
-                    f"async_depth must be >= 1, got "
-                    f"{engine_cfg.async_depth}")
+                    f"async_depth must be an integer >= 1, got "
+                    f"{engine_cfg.async_depth!r}")
+            if engine_cfg.queue_mode not in ("expert", "server"):
+                raise ValueError(
+                    f"unknown queue_mode {engine_cfg.queue_mode!r}; "
+                    "expected 'expert' or 'server'")
+            if engine_cfg.lane_budget < 1:
+                raise ValueError(
+                    f"lane_budget must be >= 1, got "
+                    f"{engine_cfg.lane_budget}")
         S = engine_cfg.num_servers if engine_cfg.mode != "tp" else 1
         # pool injected = cluster member: the expert tier is shared, its
         # placement is the cluster's to change (scale_to/rebalance here
@@ -291,9 +318,17 @@ class ServingEngine:
         # early waits for its elders)
         self._waves: Deque[dict] = deque()
         self._wave_counter = 0
+        # pending mb_done completion events by micro-batch id: superseded
+        # events (failure re-dispatch, reconcile after a lost server) are
+        # cancelled on the timeline outright — generation staleness stays
+        # as the second guard — so a depth-K pipeline never accumulates
+        # dead events
+        self._mb_events: dict = {}
         if engine_cfg.exec_mode == "async":
             # a cluster injects the shared tier; standalone owns its own
-            self.tier = tier if tier is not None else AsyncExpertTier(S)
+            self.tier = tier if tier is not None else AsyncExpertTier(
+                S, queue_mode=engine_cfg.queue_mode,
+                lane_budget=engine_cfg.lane_budget)
         # attention clients currently sharing the expert tier (the cluster
         # sets this before each member step; 1.0 = standalone engine, and
         # the virtual cost model is bit-identical to the pre-cluster one)
@@ -312,7 +347,8 @@ class ServingEngine:
                 interval=engine_cfg.rebalance_interval,
                 chunk=engine_cfg.rebalance_chunk,
                 min_gain=engine_cfg.rebalance_min_gain,
-                cooldown=engine_cfg.rebalance_cooldown))
+                cooldown=engine_cfg.rebalance_cooldown,
+                queue_aware=engine_cfg.rebalance_queue_aware))
         self.track_imbalance = self.rebalancer is not None
 
     # ------------------------------------------------- back-compat surface
@@ -369,6 +405,15 @@ class ServingEngine:
     def kv_free_fraction(self) -> float:
         return self.scheduler.kv_free_fraction()
 
+    def queue_signals(self) -> Optional[dict]:
+        """Live async-tier queue signals (per-server backlog seconds, the
+        per-lane depth/backlog breakdown) at the current engine clock —
+        what the queue-aware rebalance gate reads.  None under lockstep:
+        there is no tier to observe."""
+        if self.tier is None:
+            return None
+        return self.tier.queue_signals(self.clock)
+
     def free_kv_tokens(self) -> int:
         """Token capacity this client can still admit into: free pool
         blocks (paged) or free slots × max_seq (dense) — the memory half of
@@ -399,6 +444,7 @@ class ServingEngine:
                 self.tier.cancel_client(self.client_id)
             self.timeline.clear_pending()
             self._waves.clear()
+            self._mb_events.clear()
             self._client_free_at = self.clock
         return stranded
 
@@ -543,7 +589,14 @@ class ServingEngine:
         self.executor.resize(self.pool)
         self.server_speed = np.ones(n)   # fresh pool, fresh speeds
         if self.tier is not None:
-            self.tier.resize(n, self.clock)
+            # _drain_async quiesced the waves, so a standalone resize has
+            # nothing in flight — but the reconcile contract holds anyway:
+            # work still queued on dropped ranks re-dispatches and its
+            # completion events are re-posted
+            for mb in self.tier.resize(n, self.clock):
+                self._post_redispatch(mb)
+            self._reconcile_waves()
+            self.tier.reset_speeds()     # match the server_speed reset
         self.last_placement_change = self.clock
         self.metrics.events.append(
             {"t": self.clock, "event": "scale", "from": old, "to": n})
@@ -834,26 +887,12 @@ class ServingEngine:
         self._client_free_at = t_dispatch
         wave_id = self._wave_counter
         self._wave_counter += 1
-        # per-server expert seconds: expert_dt is the perfectly-balanced
-        # per-server time; by default each alive server gets the uniform
-        # share expert_dt * S / alive (dead servers' work concentrates on
-        # survivors — the 1/alive_frac stretch, reproduced physically as
-        # queueing).  With charge_imbalance the shares follow this step's
-        # *real* routed load instead, mirroring the lockstep clock's
-        # analytic imbalance stretch.
-        alive = self._alive_mask()
-        if self.ecfg.charge_imbalance:
-            loads = server_loads(np.asarray(expert_load, np.float64),
-                                 self.pool.smap.table, S, alive=alive,
-                                 capacities=getattr(self.pool, "capacities",
-                                                    None))
-        else:
-            loads = np.asarray(alive, np.float64)
-        total = float(loads.sum())
+        entries = self._wave_lane_entries(
+            np.asarray(expert_load, np.float64), S, expert_dt)
         wave = {"id": wave_id, "slots": active, "slot_set": set(active),
                 "tokens": next_tokens, "pending": set()}
         self._waves.append(wave)
-        if total <= 0.0:
+        if not entries:
             # no alive server / no routed-load signal (all-dead pool
             # edge): one aggregate completion at the analytic stretched
             # cost; the sentinel keeps the wave pending until it fires
@@ -861,18 +900,93 @@ class ServingEngine:
             self.timeline.post(t_dispatch + expert_dt / max(af, 1e-3),
                                "wave_done", wave=wave_id)
         else:
-            work = expert_dt * S * loads / total
-            mbs = self.tier.dispatch(self.client_id, wave_id, work,
-                                     now=t_dispatch, tokens=loads)
+            mbs = self.tier.dispatch_lanes(self.client_id, wave_id,
+                                           entries, now=t_dispatch)
             for mb in mbs:
                 wave["pending"].add(mb.mb_id)
-                self.timeline.post(mb.finish_t, "mb_done", mb=mb.mb_id,
-                                   gen=mb.generation, wave=wave_id,
-                                   server=mb.server)
+                self._mb_events[mb.mb_id] = self.timeline.post(
+                    mb.finish_t, "mb_done", mb=mb.mb_id,
+                    gen=mb.generation, wave=wave_id, server=mb.server,
+                    expert=mb.expert)
             if not mbs:
                 wave["pending"].add("wave")
                 self.timeline.post(t_dispatch, "wave_done", wave=wave_id)
         return True
+
+    def _wave_lane_entries(self, expert_load: np.ndarray, S: int,
+                           expert_dt: float) -> list:
+        """Decompose one wave's expert share into tier dispatch entries
+        ``(server, expert, work_seconds, tokens)``.
+
+        Per-server totals: ``expert_dt`` is the perfectly-balanced
+        per-server time; by default each alive server gets the uniform
+        share ``expert_dt * S / alive`` (dead servers' work concentrates
+        on survivors — the 1/alive_frac stretch, reproduced physically as
+        queueing).  With ``charge_imbalance`` the shares follow this
+        step's *real* routed load instead, mirroring the lockstep clock's
+        analytic imbalance stretch.
+
+        Under ``queue_mode="expert"`` each server's share splits further
+        into per-expert lane entries along the routed-load decomposition
+        (:func:`~repro.core.load_balance.lane_loads`) — same per-server
+        totals, finer queueing granularity — emitted server-major,
+        expert-ascending (deterministic).  A server with no routed load
+        this wave keeps one aggregate-lane entry so the uniform cadence
+        is unchanged.  ``VirtualClock.lane_overhead`` (default 0) is
+        added per lane entry when a server's share splits."""
+        alive = self._alive_mask()
+        caps = getattr(self.pool, "capacities", None)
+        lane_mode = self.ecfg.queue_mode == "expert"
+        overhead = float(getattr(self.clk, "lane_overhead", 0.0))
+        entries = []
+        if self.ecfg.charge_imbalance:
+            lanes = lane_loads(expert_load, self.pool.smap.table, S,
+                               alive=alive, capacities=caps)
+            total = float(lanes.sum())
+            if total <= 0.0:
+                return []
+            scale = expert_dt * S / total
+            for s in range(S):
+                row = lanes[s]
+                row_sum = float(row.sum())
+                if row_sum <= 0.0:
+                    continue
+                if lane_mode:
+                    nz = np.nonzero(row)[0]
+                    extra = overhead if len(nz) > 1 else 0.0
+                    for e in nz:
+                        entries.append((s, int(e),
+                                        scale * float(row[e]) + extra,
+                                        float(row[e])))
+                else:
+                    entries.append((s, -1, scale * row_sum, row_sum))
+            return entries
+        n_alive = int(alive.sum())
+        if n_alive <= 0:
+            return []
+        w_server = expert_dt * S / n_alive
+        if not lane_mode:
+            return [(s, -1, w_server, 1.0) for s in range(S) if alive[s]]
+        lanes = lane_loads(expert_load, self.pool.smap.table, S,
+                           alive=alive, capacities=caps)
+        for s in range(S):
+            if not alive[s]:
+                continue
+            row = lanes[s]
+            row_sum = float(row.sum())
+            if row_sum <= 0.0:
+                # uniform cost model: a server with nothing routed this
+                # wave still runs its uniform share (dispatch/combine
+                # sync) — one aggregate-lane entry keeps the cadence
+                entries.append((s, -1, w_server, 0.0))
+                continue
+            nz = np.nonzero(row)[0]
+            extra = overhead if len(nz) > 1 else 0.0
+            for e in nz:
+                entries.append((s, int(e),
+                                w_server * float(row[e]) / row_sum + extra,
+                                float(row[e])))
+        return entries
 
     # -------------------------------------------------------- async events
     def _handle_event(self, ev: Event) -> None:
@@ -908,9 +1022,13 @@ class ServingEngine:
             return                      # re-dispatched or cancelled since
         mb = self.tier.mbs[p["mb"]]
         self.tier.mark_done(mb)
+        self._mb_events.pop(mb.mb_id, None)
         # queueing delay: how long the micro-batch waited behind other
-        # work on its server — the first-class tail-latency signal
-        self.metrics.queue_delays.append(mb.start_t - mb.enqueue_t)
+        # work in its lane/on its server — the first-class tail-latency
+        # signal, attributed per (server, expert-lane) for the breakdown
+        self.metrics.observe_queue_delay(mb.start_t - mb.enqueue_t,
+                                         server=mb.server,
+                                         expert=mb.expert)
         for w in self._waves:
             if w["id"] == mb.wave_id:
                 w["pending"].discard(mb.mb_id)
@@ -957,16 +1075,21 @@ class ServingEngine:
 
     def _post_redispatch(self, mb: MicroBatch) -> None:
         """Post the fresh completion event for a failure-re-dispatched
-        micro-batch (the cluster fans these to the owning client)."""
-        self.timeline.post(mb.finish_t, "mb_done", mb=mb.mb_id,
-                           gen=mb.generation, wave=mb.wave_id,
-                           server=mb.server)
+        micro-batch (the cluster fans these to the owning client).  The
+        superseded event for the old placement is cancelled outright —
+        generation staleness remains as the second guard."""
+        stale = self._mb_events.pop(mb.mb_id, None)
+        if stale is not None:
+            self.timeline.cancel(stale)
+        self._mb_events[mb.mb_id] = self.timeline.post(
+            mb.finish_t, "mb_done", mb=mb.mb_id, gen=mb.generation,
+            wave=mb.wave_id, server=mb.server, expert=mb.expert)
 
     def _reconcile_waves(self) -> None:
         """Drop cancelled micro-batches from the in-flight waves (a
-        failure with no survivors cancels outright); retire waves left
-        with nothing pending — no event will ever fire for a cancelled
-        batch."""
+        failure with no survivors cancels outright) and cancel their
+        pending completion events; retire waves left with nothing
+        pending."""
         if self.tier is None:
             return
         for w in self._waves:
@@ -976,6 +1099,9 @@ class ServingEngine:
                 mb = self.tier.mbs.get(mb_id)
                 if mb is None or mb.cancelled:
                     w["pending"].discard(mb_id)
+                    stale = self._mb_events.pop(mb_id, None)
+                    if stale is not None:
+                        self.timeline.cancel(stale)
         self._drain_finished_waves()
 
     def _drain_async(self) -> None:

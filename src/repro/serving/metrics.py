@@ -24,10 +24,14 @@ class ServingMetrics:
     # per-interval decode throughput (for the fault-tolerance timeline)
     timeline: List[Dict] = field(default_factory=list)
     # --- async expert tier (exec_mode="async" only; else empty) ---------
-    # per-micro-batch queueing delay: time waited behind other work on the
-    # micro-batch's expert server before service started — the first-class
-    # tail-latency signal the per-step model couldn't observe
+    # per-micro-batch queueing delay: time waited behind other work in the
+    # micro-batch's queue lane before service started — the first-class
+    # tail-latency signal the per-step model couldn't observe.  The two
+    # parallel lists attribute each delay to its (server, expert-lane);
+    # expert -1 is a server's aggregate lane (queue_mode="server")
     queue_delays: List[float] = field(default_factory=list)
+    queue_delay_servers: List[int] = field(default_factory=list)
+    queue_delay_experts: List[int] = field(default_factory=list)
     # --- paged-KV counters (zero when the engine runs the dense cache) ---
     preemptions: int = 0               # slots evicted to recompute queue
     prefix_hit_blocks: int = 0         # cached blocks adopted at admission
@@ -83,8 +87,36 @@ class ServingMetrics:
         the async-vs-lockstep differential gates pin."""
         return self.itl_stats()["p99"]
 
-    def queue_delay_stats(self) -> Dict[str, float]:
-        return _latency_stats(self.queue_delays)
+    def observe_queue_delay(self, delay: float, server: int = -1,
+                            expert: int = -1) -> None:
+        """Record one micro-batch's queueing delay attributed to its
+        (server, expert-lane)."""
+        self.queue_delays.append(float(delay))
+        self.queue_delay_servers.append(int(server))
+        self.queue_delay_experts.append(int(expert))
+
+    def queue_delay_stats(self, by: str = None) -> Dict:
+        """Queue-delay latency stats — aggregate by default, or broken
+        down per server (``by="server"``, keys ``"s"``) / per expert lane
+        (``by="lane"``, keys ``"s:e"``)."""
+        if by is None:
+            return _latency_stats(self.queue_delays)
+        return {k: _latency_stats(v)
+                for k, v in sorted(self._queue_groups(by).items())}
+
+    def _queue_groups(self, by: str) -> Dict[str, List[float]]:
+        if by == "server":
+            keys = [str(s) for s in self.queue_delay_servers]
+        elif by == "lane":
+            keys = [f"{s}:{e}" for s, e in zip(self.queue_delay_servers,
+                                               self.queue_delay_experts)]
+        else:
+            raise ValueError(f"unknown queue-delay grouping {by!r}; "
+                             "expected 'server' or 'lane'")
+        groups: Dict[str, List[float]] = {}
+        for k, d in zip(keys, self.queue_delays):
+            groups.setdefault(k, []).append(d)
+        return groups
 
     def throughput_curve(self, bin_width: float) -> List[Tuple[float, float]]:
         """Decode throughput per time bin: [(bin midpoint, tok/s), ...].
@@ -128,11 +160,15 @@ class ServingMetrics:
                         self.peak_expert_imbalance],
         })
         if self.queue_delays:
-            # async-only key, added conditionally so every lockstep
+            # async-only keys, added conditionally so every lockstep
             # fingerprint (including committed benchmark baselines) is
-            # byte-identical to the pre-async scheme
+            # byte-identical to the pre-async scheme; the lane attribution
+            # rides along so a delay landing in the wrong lane is a
+            # fingerprint drift, not a silent accounting bug
             payload["queue"] = [round(float(q), ndigits)
                                 for q in self.queue_delays]
+            payload["queue_lanes"] = [list(self.queue_delay_servers),
+                                      list(self.queue_delay_experts)]
         blob = json.dumps(payload, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()
 
@@ -173,6 +209,9 @@ class ServingMetrics:
                 "queue_delay_ms": {
                     k: round(v * 1e3, 3)
                     for k, v in self.queue_delay_stats().items()},
+                "queue_delay_p99_ms_by_server": {
+                    k: round(v["p99"] * 1e3, 3)
+                    for k, v in self.queue_delay_stats(by="server").items()},
             }
         return out
 
@@ -261,11 +300,25 @@ class ClusterMetrics:
         return [q for c in self.per_client for q in c.queue_delays]
 
     @property
+    def queue_delay_servers(self) -> List[int]:
+        return [s for c in self.per_client for s in c.queue_delay_servers]
+
+    @property
+    def queue_delay_experts(self) -> List[int]:
+        return [e for c in self.per_client for e in c.queue_delay_experts]
+
+    @property
     def p99_itl(self) -> float:
         return self.itl_stats()["p99"]
 
-    def queue_delay_stats(self) -> Dict[str, float]:
-        return _latency_stats(self.queue_delays)
+    def queue_delay_stats(self, by: str = None) -> Dict:
+        """Cluster-wide queue-delay stats; ``by`` groups per server /
+        per lane across every client (the tier is shared, so lane keys
+        mean the same thing cluster-wide)."""
+        if by is None:
+            return _latency_stats(self.queue_delays)
+        return {k: _latency_stats(v) for k, v in sorted(
+            ServingMetrics._queue_groups(self, by).items())}
 
     @property
     def preemptions(self) -> int:

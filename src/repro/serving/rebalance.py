@@ -99,6 +99,14 @@ class RebalanceConfig:
     cooldown: float = 0.05
     # decode steps observed before the first evaluation (EMA warm-up)
     min_observations: int = 4
+    # read the async tier's live queue signals (host.queue_signals()):
+    # when the tier is measurably backlogged, ``min_gain`` is evaluated
+    # against a modeled queue-delay reduction — the max server backlog
+    # now vs the balanced backlog the planned placement would leave —
+    # instead of the routed-count imbalance alone.  Falls back to the
+    # count-only gate whenever there is no tier or no backlog (lockstep
+    # hosts behave exactly as before)
+    queue_aware: bool = True
 
 
 @dataclass
@@ -143,6 +151,19 @@ class RebalanceController:
             return
         self._evaluate(engine)
 
+    def _queue_signals(self, engine):
+        """The host's live async-tier queue signals, or None (lockstep
+        hosts / queue-awareness off / no measurable backlog)."""
+        if not self.cfg.queue_aware:
+            return None
+        probe = getattr(engine, "queue_signals", None)
+        if probe is None:
+            return None
+        sig = probe()
+        if not sig or sig["alive"] <= 0 or sig["max_backlog"] <= 1e-12:
+            return None
+        return sig
+
     def _evaluate(self, engine) -> None:
         pool = engine.pool
         mapping, red = pool.plan()
@@ -154,7 +175,21 @@ class RebalanceController:
         planned = load_balance.imbalance(
             pool.stats.ema, mapping, pool.num_servers,
             alive=pool.smap.alive, capacities=pool.capacities)
-        if current - planned < self.cfg.min_gain * current:
+        sig = self._queue_signals(engine)
+        if sig is not None:
+            # queue-aware gate: migrate when the modeled queue-delay
+            # reduction clears min_gain.  The measured delay is the max
+            # server backlog now; the planned placement redistributes the
+            # queued seconds with its residual imbalance, leaving
+            # ``planned_imbalance × mean backlog`` on its hottest server.
+            # Routed EMA still decides WHERE replicas go — the live
+            # backlog decides WHETHER moving them is worth the copies.
+            cur_delay = sig["max_backlog"]
+            planned_delay = planned * (sig["total_backlog"] / sig["alive"])
+            if cur_delay - planned_delay < self.cfg.min_gain * cur_delay:
+                engine.metrics.rebalance_noops += 1
+                return
+        elif current - planned < self.cfg.min_gain * current:
             engine.metrics.rebalance_noops += 1
             return
         aligned, updates = load_balance.migration_updates(
@@ -164,11 +199,15 @@ class RebalanceController:
             return
         self._pending = updates
         self._target_digest = digest
-        engine.metrics.events.append(
-            {"t": engine.clock, "event": "rebalance_plan",
-             "updates": len(updates),
-             "imbalance": round(current, 6),
-             "planned_imbalance": round(planned, 6)})
+        event = {"t": engine.clock, "event": "rebalance_plan",
+                 "updates": len(updates),
+                 "imbalance": round(current, 6),
+                 "planned_imbalance": round(planned, 6)}
+        if sig is not None:
+            event["queue_delay"] = round(sig["max_backlog"], 6)
+            event["planned_queue_delay"] = round(
+                planned * (sig["total_backlog"] / sig["alive"]), 6)
+        engine.metrics.events.append(event)
 
     # ----------------------------------------------------------- migration
     def _apply_chunk(self, engine) -> None:

@@ -171,14 +171,139 @@ def test_occupy_all_busies_alive_servers_only():
     assert mb.start_t == pytest.approx(1.5)
 
 
-def test_resize_resets_queues_from_now():
+def test_resize_grow_reconciles_instead_of_resetting():
+    """Growing the pool keeps the survivors' committed frontiers, speeds
+    and in-flight work; only the new ranks start fresh from now."""
+    tier = AsyncExpertTier(2)
+    mbs = tier.dispatch(0, 0, [1e-3, 1e-3], now=0.0)
+    tier.set_slowdown(0, 4.0)
+    moved = tier.resize(3, now=2.0)
+    assert tier.num_servers == 3 and moved == []
+    assert tier.queues[0].slowdown == 4.0           # survivor keeps speed
+    assert tier.queues[0].busy_until == pytest.approx(1e-3)
+    assert tier.queues[2].alive and tier.queues[2].free_at() == 2.0
+    assert all(mb.mb_id in tier.mbs for mb in mbs)  # nothing dropped
+    tier.reset_speeds()                             # wholesale-replan path
+    assert all(q.slowdown == 1.0 for q in tier.queues)
+
+
+def test_resize_shrink_redispatches_inflight_to_survivors():
+    """Shrinking while waves are in flight re-dispatches the dropped
+    ranks' unfinished micro-batches like a failure and returns them so
+    the owning engines can re-post completion events."""
+    tier = AsyncExpertTier(3)
+    tier.dispatch(0, 0, [1e-3, 0.0, 5e-3], now=0.0)
+    victim = next(mb for mb in tier.mbs.values() if mb.server == 2)
+    old_gen = victim.generation
+    moved = tier.resize(2, now=0.0)
+    assert tier.num_servers == 2 and len(tier.queues) == 2
+    assert moved == [victim]
+    assert victim.server == 1                       # idle survivor wins
+    assert victim.generation == old_gen + 1
+    assert not tier.is_current(victim.mb_id, old_gen)
+    assert tier.is_current(victim.mb_id, victim.generation)
+    assert tier.in_flight() == 2                    # nothing lost
+    assert tier.enqueued == tier.completed + tier.cancelled \
+        + tier.in_flight()
+
+
+def test_recover_server_clamps_stale_frontiers_to_now():
+    """Recovery reconciles a dead rank's stale lane/stream frontiers up
+    to now, so new work can't start in the past."""
     tier = AsyncExpertTier(2)
     tier.dispatch(0, 0, [1e-3, 1e-3], now=0.0)
-    tier.set_slowdown(0, 4.0)
-    tier.resize(3, now=2.0)
-    assert tier.num_servers == 3
-    assert all(q.alive and q.slowdown == 1.0 for q in tier.queues)
-    assert all(q.busy_until == 2.0 for q in tier.queues)
+    tier.fail_server(1, now=0.0)
+    tier.recover_server(1, now=3.0)
+    assert tier.queues[1].alive
+    assert tier.queues[1].free_at() == 3.0
+    (mb,) = tier.dispatch(0, 1, [0.0, 1e-3], now=3.0)
+    assert mb.start_t == 3.0
+
+
+# ------------------------------------------------------------------- lanes
+
+
+def test_tier_validates_queue_mode_and_budget():
+    with pytest.raises(ValueError):
+        AsyncExpertTier(2, queue_mode="bogus")
+    with pytest.raises(ValueError):
+        AsyncExpertTier(2, lane_budget=0)
+
+
+def test_legacy_dispatch_funnels_through_aggregate_lane():
+    from repro.serving.event_loop import AGGREGATE_LANE
+    tier = AsyncExpertTier(2)
+    mbs = tier.dispatch(0, 0, [1e-3, 1e-3], now=0.0)
+    assert all(mb.expert == AGGREGATE_LANE for mb in mbs)
+    assert {ln.expert for ln in tier.lanes()} == {AGGREGATE_LANE}
+
+
+def test_lane_fifo_with_budget_overlaps_cold_lane():
+    """A hot expert serializes in its own lane even when a second service
+    stream is free; a cold expert flows through that stream meanwhile —
+    the per-expert-lane win over the single per-server FIFO."""
+    tier = AsyncExpertTier(1, lane_budget=2)
+    (hot1,) = tier.dispatch_lanes(0, 0, [(0, 7, 4e-3)], now=0.0)
+    (hot2,) = tier.dispatch_lanes(0, 1, [(0, 7, 4e-3)], now=0.0)
+    assert hot1.start_t == 0.0
+    assert hot2.start_t == pytest.approx(4e-3)      # lane FIFO binds
+    (cold,) = tier.dispatch_lanes(0, 2, [(0, 3, 1e-3)], now=0.0)
+    assert cold.start_t == 0.0                      # free stream, free lane
+    assert cold.finish_t == pytest.approx(1e-3)
+
+
+def test_fail_server_redispatch_is_lane_aware():
+    """Re-dispatch targets the survivor with the earliest start for the
+    victim's own expert lane, not the globally least-busy server."""
+    tier = AsyncExpertTier(3, lane_budget=2)
+    tier.dispatch_lanes(
+        0, 0, [(0, 5, 10e-3), (2, 7, 2e-3), (1, 7, 1e-3)], now=0.0)
+    victim = next(mb for mb in tier.mbs.values() if mb.server == 1)
+    moved = tier.fail_server(1, now=0.0)
+    assert moved == [victim]
+    # server 2 is globally less busy, but its expert-7 lane is occupied;
+    # server 0 has a free stream and an idle expert-7 lane
+    assert victim.server == 0
+    assert victim.start_t == 0.0
+    # the hop is attributed to the failed rank's lane counters
+    assert tier.queues[1].moved == 1
+    assert tier.queues[1].lanes[7].moved == 1
+
+
+def test_lane_conservation_counters_balance():
+    tier = AsyncExpertTier(2, lane_budget=2)
+    mbs = tier.dispatch_lanes(
+        0, 0, [(0, 1, 1e-3), (0, 2, 1e-3), (1, 1, 1e-3)], now=0.0)
+    tier.mark_done(mbs[0])
+    tier.fail_server(1, now=0.0)        # moves mbs[2] into server 0's lane
+    tier.dispatch_lanes(1, 0, [(0, 2, 1e-3)], now=0.0)
+    assert tier.cancel_client(1) == 1
+    for q in tier.queues:
+        for ln in q.lanes.values():
+            assert ln.enqueued == ln.drained + ln.cancelled + ln.moved \
+                + ln.in_flight()
+        # server counters are exactly the sum of their lanes'
+        assert q.enqueued == sum(ln.enqueued for ln in q.lanes.values())
+        assert q.moved == sum(ln.moved for ln in q.lanes.values())
+    assert sum(ln.in_flight() for ln in tier.lanes()) == tier.in_flight()
+
+
+def test_queue_signals_report_lane_backlog():
+    tier = AsyncExpertTier(2)
+    tier.dispatch_lanes(0, 0, [(0, 3, 2e-3), (1, 5, 1e-3)], now=0.0)
+    sig = tier.queue_signals(now=0.0)
+    assert sig["alive"] == 2
+    assert sig["server_backlog"][0] == pytest.approx(2e-3)
+    assert sig["max_backlog"] == pytest.approx(2e-3)
+    assert sig["total_backlog"] == pytest.approx(3e-3)
+    assert sig["lane_backlog"][(0, 3)] == pytest.approx(2e-3)
+    assert sig["lane_depth"][(1, 5)] == 1
+    # dead servers report zero: their work re-dispatched to survivors
+    tier.fail_server(1, now=0.0)
+    sig = tier.queue_signals(now=0.0)
+    assert sig["alive"] == 1
+    assert sig["server_backlog"][1] == 0.0
+    assert sig["max_backlog"] == pytest.approx(3e-3)
 
 
 def test_cancel_client_abandons_only_that_clients_work():
