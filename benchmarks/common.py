@@ -82,8 +82,22 @@ def run_cluster_scenario(cfg, ccfg: ClusterConfig, scenario: Scenario,
     return cl, res
 
 
+def bench_env() -> Dict[str, str]:
+    """Resolved runtime versions, stamped into every benchmark JSON.  The
+    gate fingerprints are only stable within one resolved jax build (see
+    ``constraints.txt``); recording the versions lets ``check_bench.py``
+    turn a silent-upgrade fingerprint drift into a named failure."""
+    import platform
+
+    import jax
+    import jaxlib
+    return {"jax": jax.__version__, "jaxlib": jaxlib.__version__,
+            "python": platform.python_version()}
+
+
 def save_result(name: str, payload: Dict) -> str:
     os.makedirs(RESULTS_DIR, exist_ok=True)
+    payload.setdefault("env", bench_env())
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)

@@ -1,45 +1,145 @@
-"""Benchmark harness entry point — one function per paper table/figure.
+"""Benchmark harness entry point — a registry, one entry per paper
+table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Heavy figures can be skipped with
-REPRO_BENCH_FAST=1 (CI smoke).
+Default mode prints ``name,us_per_call,derived`` CSV for every registered
+suite (heavy figures skipped with REPRO_BENCH_FAST=1 — CI smoke).
+
+``--smoke`` runs each registered *smoke* configuration instead (the short
+deterministic run that writes ``experiments/bench/<name>.json`` with a
+``gate`` object); with ``--gated`` it is restricted to benchmarks that
+have a committed baseline under ``experiments/baselines/``.  This is the
+CI regression lane: a new benchmark enrolls by (a) registering here with
+a ``smoke`` runner and (b) committing a baseline — no workflow edit.
+
+    python benchmarks/run.py --smoke --gated     # run every gated smoke
+    python tools/check_bench.py --all            # then gate them all
 """
 
+import argparse
 import os
 import sys
 import traceback
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+BASELINES_DIR = os.path.join(os.path.dirname(__file__), "..",
+                             "experiments", "baselines")
 
 
-def main() -> None:
-    fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
-    from benchmarks import (ablation, async_tier, comm, expert_balance,
-                            fault_tolerance, frontend_routing, latency,
-                            overlap_ablation, paged_kv, roofline, scaling,
-                            throughput)
+@dataclass(frozen=True)
+class Bench:
+    """One registered benchmark suite.
 
-    suites = [("fig12_comm", comm.main),
-              ("fig13_ablation", ablation.main),
-              ("roofline", roofline.main)]
-    if not fast:
-        suites = [("fig8_throughput", throughput.main),
-                  ("fig8_overlap_ablation", overlap_ablation.main),
-                  ("fig9_latency", latency.main),
-                  ("fig10_fault_tolerance", fault_tolerance.main),
-                  ("fig11_scaling", scaling.main),
-                  ("paged_kv", paged_kv.main),
-                  ("expert_balance", expert_balance.main),
-                  ("frontend_routing", frontend_routing.main),
-                  ("async_tier", async_tier.main)] + suites
+    ``main`` is the full CSV run; ``smoke`` (optional) is the short
+    deterministic run that writes ``experiments/bench/<name>.json`` with
+    a ``gate`` object.  ``heavy`` suites are skipped under
+    REPRO_BENCH_FAST=1.
+    """
+    name: str
+    main: Callable[[], List[str]]
+    smoke: Optional[Callable[[], dict]] = None
+    heavy: bool = False
 
+    @property
+    def gated(self) -> bool:
+        """Enrolled in the CI regression lane: has a smoke runner AND a
+        committed baseline (registration alone keeps it smoke-only)."""
+        return self.smoke is not None and os.path.exists(
+            os.path.join(BASELINES_DIR, f"{self.name}.json"))
+
+
+def registry() -> List[Bench]:
+    from benchmarks import (ablation, async_tier, comm, elasticity,
+                            expert_balance, fault_tolerance,
+                            frontend_routing, latency, overlap_ablation,
+                            paged_kv, roofline, scaling, throughput)
+    return [
+        Bench("fig8_throughput", throughput.main, heavy=True),
+        Bench("fig8_overlap_ablation", overlap_ablation.main, heavy=True),
+        Bench("fig9_latency", latency.main, heavy=True),
+        Bench("fig10_fault_tolerance", fault_tolerance.main, heavy=True),
+        Bench("fig11_scaling", scaling.main, heavy=True),
+        Bench("paged_kv", paged_kv.main,
+              smoke=lambda: paged_kv.run(smoke=True), heavy=True),
+        Bench("expert_balance", expert_balance.main,
+              smoke=lambda: expert_balance.run(smoke=True), heavy=True),
+        Bench("frontend_routing", frontend_routing.main,
+              smoke=lambda: frontend_routing.run(smoke=True), heavy=True),
+        Bench("async_tier", async_tier.main,
+              smoke=lambda: async_tier.run(smoke=True), heavy=True),
+        Bench("elasticity", elasticity.main,
+              smoke=lambda: elasticity.run(smoke=True), heavy=True),
+        Bench("fig12_comm", comm.main),
+        Bench("fig13_ablation", ablation.main),
+        Bench("roofline", roofline.main),
+    ]
+
+
+def run_smokes(benches: List[Bench]) -> int:
+    failures = 0
+    for b in benches:
+        print(f"== {b.name} (smoke) ==", flush=True)
+        try:
+            b.smoke()
+        except Exception as e:
+            failures += 1
+            print(f"{b.name}: ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    return failures
+
+
+def run_csv(benches: List[Bench]) -> int:
     print("name,us_per_call,derived")
     failures = 0
-    for name, fn in suites:
+    for b in benches:
         try:
-            for row in fn():
+            for row in b.main():
                 print(row)
         except Exception as e:
             failures += 1
-            print(f"{name},nan,ERROR:{type(e).__name__}:{e}")
+            print(f"{b.name},nan,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+    return failures
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="run registered smoke configurations (writes "
+                         "experiments/bench/<name>.json) instead of the "
+                         "full CSV suites")
+    ap.add_argument("--gated", action="store_true",
+                    help="restrict to benchmarks with a committed "
+                         "baseline under experiments/baselines/")
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark names to run")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registry (name, smoke?, gated?) and "
+                         "exit")
+    args = ap.parse_args(argv)
+
+    benches = registry()
+    if args.list:
+        for b in benches:
+            print(f"{b.name},smoke={int(b.smoke is not None)},"
+                  f"gated={int(b.gated)}")
+        return
+    if args.only:
+        names = {n.strip() for n in args.only.split(",") if n.strip()}
+        unknown = names - {b.name for b in benches}
+        if unknown:
+            raise SystemExit(f"unknown benchmark(s): {sorted(unknown)}")
+        benches = [b for b in benches if b.name in names]
+    if args.gated:
+        benches = [b for b in benches if b.gated]
+    if args.smoke:
+        benches = [b for b in benches if b.smoke is not None]
+        failures = run_smokes(benches)
+    else:
+        fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+        if fast:
+            benches = [b for b in benches if not b.heavy]
+        failures = run_csv(benches)
     if failures:
         raise SystemExit(f"{failures} benchmark suites failed")
 

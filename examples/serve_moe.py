@@ -13,6 +13,9 @@ Run:  PYTHONPATH=src python examples/serve_moe.py [--requests 16]
       PYTHONPATH=src python examples/serve_moe.py --exec-mode async \
           --async-depth 4     # event-driven expert tier, depth-K waves
                               # (switches to the deterministic VirtualClock)
+      PYTHONPATH=src python examples/serve_moe.py --clients 2 --elastic
+                              # full-system elasticity: servers, clients and
+                              # the resident expert set follow traffic
 """
 
 import argparse
@@ -54,6 +57,12 @@ def main():
                     help="decode waves in flight under --exec-mode async "
                          "(1 = lockstep cadence, 2 = ping-pong, K = deeper "
                          "speculative pipelining)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="attach the full-system autoscaler: expert-server "
+                         "count, attention-client count and scale-to-zero "
+                         "expert paging all follow observed traffic (the "
+                         "batch draining scales the system down under you; "
+                         "token streams never change)")
     args = ap.parse_args()
 
     cfg = get_config("deepseek-r1").reduced()
@@ -73,8 +82,18 @@ def main():
     clock_factory = VirtualClock if args.exec_mode == "async" else None
     cluster = Cluster(cfg, ClusterConfig(clients=args.clients,
                                          frontend_policy=args.frontend_policy,
-                                         engine=ecfg), seed=0,
+                                         engine=ecfg,
+                                         max_clients=args.clients), seed=0,
                       clock_factory=clock_factory)
+
+    scaler = None
+    if args.elastic:
+        from repro.serving.autoscale import Autoscaler, AutoscalerConfig
+        scaler = Autoscaler(AutoscalerConfig(
+            rate_per_server=12.0, min_servers=1, max_servers=4,
+            window=0.1, cooldown=0.1,
+            rate_per_client=24.0, min_clients=1, max_clients=args.clients,
+            expert_idle_fraction=0.5))
 
     # ShareGPT-like workload (bucketed prompt lengths bound prefill compiles)
     dist = ShareGPTLike(seed=0)
@@ -82,11 +101,15 @@ def main():
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(np.clip(2 ** int(np.log2(max(plens[i] // 64, 1)) + 3), 8, 32))
+        if scaler is not None:
+            scaler.observe_arrival(cluster.clock)
         cluster.submit(Request(
             i, rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
             SamplingParams(max_new_tokens=int(min(rlens[i] // 32 + 8, 24)))))
 
     def chaos(c):
+        if scaler is not None:
+            scaler.step(c, c.clock)
         if c.step_idx == 12:
             print(f"[t={c.clock:.2f}s] *** injecting failure of expert "
                   f"server 1 (mode={args.mode}) ***")

@@ -48,6 +48,11 @@ class ServerPool:
         E = self.cfg.moe.num_experts
         self.stats = load_balance.ExpertStats(E)
         self.route_bias = np.zeros(E, np.float32)
+        # scale-to-zero state: experts paged out of the tier (replica slots
+        # evicted; the primary shard stays addressable as the page-in
+        # source) and, for hysteresis, when each one last paged back in
+        self.cold: set = set()
+        self.page_in_t: dict = {}
         mapping, red = self.plan(np.ones(E))
         self.smap = self._make_smap(mapping)
         self.redundant_table = red
@@ -86,6 +91,13 @@ class ServerPool:
         if load is None:
             load = (self.stats.ema if self.stats.ema is not None
                     else np.ones(self.cfg.moe.num_experts))
+        if self.cold:
+            # paged-out experts must not attract replicas: mask their load
+            # so the planner spends the redundant slots on resident experts
+            load = np.asarray(load, np.float64).copy()
+            for e in self.cold:
+                if 0 <= e < load.shape[0]:
+                    load[e] = 0.0
         return load_balance.eplb_plan(
             load, self.num_servers, self.n_redundant, self.max_replicas,
             capacities=self.capacities)
@@ -133,6 +145,63 @@ class ServerPool:
         self.apply_plan(mapping, red)
         return True
 
+    # ------------------------------------------------------- scale-to-zero
+    def page_out_experts(self, experts
+                         ) -> Tuple[List[int], List[Tuple[int, int, int]]]:
+        """Page cold experts out of the tier (serverless experts à la
+        MoEless): every replica slot is evicted — dropped from the live
+        mapping table and zeroed in the redundant weight banks — and the
+        expert is marked cold.  The primary shard stays addressable as the
+        page-in source, so a token that *does* route to a cold expert still
+        computes exactly (the elasticity identity contract); it pays the
+        modeled cold-start penalty instead of dropping.
+
+        Returns ``(paged, updates)``: the experts actually paged and the
+        ``(server, local_slot, -1)`` weight updates the caller must apply
+        through its migration path (``apply_migration`` /
+        ``expert_server.migrate_slots``) to physically zero the bank slots.
+        """
+        from repro.core import expert_server
+        E = self.cfg.moe.num_experts
+        prim = load_balance.primary_owner(E, self.num_servers)
+        paged: List[int] = []
+        updates: List[Tuple[int, int, int]] = []
+        for e in sorted({int(x) for x in experts}):
+            if not 0 <= e < E or e in self.cold:
+                continue
+            for s, j in expert_server.replica_columns(
+                    self.redundant_table, e):
+                self.redundant_table[s, j] = -1
+                updates.append((s, expert_server.redundant_slot(
+                    E, self.num_servers, j), -1))
+            row = self.smap.table[e]
+            row[:] = -1
+            row[0] = prim[e]           # primary only: the page-in source
+            self.cold.add(e)
+            self.page_in_t.pop(e, None)
+            paged.append(e)
+        return paged, updates
+
+    def page_in_expert(self, e: int, t: float) -> bool:
+        """First token routed to a cold expert: mark it resident again and
+        record the page-in time (the autoscaler's hysteresis protects a
+        freshly paged-in expert from immediately paging back out).  The
+        expert serves from its primary shard until the next rebalance
+        re-plans replicas for it — ``plan`` stops masking its load the
+        moment it leaves ``cold``.  Returns whether a page-in happened."""
+        e = int(e)
+        if e not in self.cold:
+            return False
+        self.cold.discard(e)
+        self.page_in_t[e] = float(t)
+        return True
+
+    def resident_fraction(self) -> float:
+        """Share of experts currently resident in the tier (1.0 = nothing
+        paged out) — the expert-tier term of provisioned-resource
+        accounting."""
+        return 1.0 - len(self.cold) / self.cfg.moe.num_experts
+
     # ------------------------------------------------------------- elastic
     def feasible_counts(self) -> List[int]:
         """Pool sizes the block-contiguous primary layout supports (E % n == 0)."""
@@ -163,6 +232,11 @@ class ServerPool:
             k = min(len(self.capacities), n)
             caps[:k] = np.asarray(self.capacities, np.float64)[:k]
             self.capacities = caps
+        # a resize re-provisions every rank (weights reshard from the master
+        # bank), so paged-out experts come back resident; the autoscaler
+        # pages them out again once its cooldown re-opens
+        self.cold.clear()
+        self.page_in_t.clear()
         mapping, red = self.plan(load)
         self.smap = self._make_smap(mapping)
         k = min(len(old_alive), n)

@@ -143,6 +143,17 @@ def redundant_slot(num_experts: int, num_servers: int, j: int) -> int:
     return num_experts // num_servers + j
 
 
+def replica_columns(redundant_table: np.ndarray,
+                    expert: int) -> Tuple[Tuple[int, int], ...]:
+    """``(server, column)`` positions of every replica slot holding
+    ``expert`` in the redundant table, in deterministic row-major order —
+    the scale-to-zero page-out scan (each hit becomes a
+    ``(server, redundant_slot(...), -1)`` eviction update for
+    :func:`migrate_slots`)."""
+    red = np.asarray(redundant_table)
+    return tuple((int(s), int(j)) for s, j in np.argwhere(red == expert))
+
+
 def migrate_slots(server_w: Dict, num_experts: int,
                   updates) -> Dict:
     """Copy expert weights into specific server slots in place — the weight

@@ -54,6 +54,11 @@ def main() -> None:
                     help="decode waves in flight under --exec-mode async "
                          "(1 = lockstep cadence, K = deeper speculative "
                          "wave pipelining)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="attach the full-system autoscaler: expert-server "
+                         "count (and, with --clients > 1, client count and "
+                         "scale-to-zero expert paging) follows observed "
+                         "traffic; token streams never change")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -81,9 +86,20 @@ def main() -> None:
     else:
         system = Cluster(cfg, ClusterConfig(
             clients=args.clients, frontend_policy=args.frontend_policy,
-            engine=ecfg), seed=0, clock_factory=clock_factory)
+            engine=ecfg, max_clients=args.clients), seed=0,
+            clock_factory=clock_factory)
+    scaler = None
+    if args.elastic:
+        from repro.serving.autoscale import Autoscaler, AutoscalerConfig
+        scaler = Autoscaler(AutoscalerConfig(
+            rate_per_server=12.0, min_servers=1, max_servers=args.servers,
+            window=0.1, cooldown=0.1,
+            rate_per_client=24.0, min_clients=1, max_clients=args.clients,
+            expert_idle_fraction=0.5))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
+        if scaler is not None:
+            scaler.observe_arrival(system.clock)
         system.submit(Request(
             i, rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
             SamplingParams(max_new_tokens=args.max_new)))
@@ -94,6 +110,8 @@ def main() -> None:
         fail = (int(step_s), int(rank_s))
 
     def on_step(s):
+        if scaler is not None:
+            scaler.step(s, s.clock)
         if fail and s.step_idx == fail[0]:
             print(f"[t={s.clock:.2f}s] injecting failure of server {fail[1]}")
             s.inject_server_failure(fail[1])

@@ -8,9 +8,27 @@ target at its configured granularity — the 37.5% saving in the paper is
 exactly the gap between granularity 1 and granularity 64 under a traffic
 drop.
 
+Full-system elasticity extends the same loop to both tiers:
+
+* **attention tier** — with ``rate_per_client > 0`` the client count
+  becomes a controller output too: against a :class:`~repro.serving.
+  cluster.Cluster` the loop drives ``scale_clients`` (spawn = join empty
+  at cluster time, drain = stop admitting / finish in-flight waves /
+  park), with ingress backlog as the backpressure term;
+* **scale-to-zero experts** — with ``expert_idle_fraction > 0`` experts
+  whose traffic-EMA share decays below the threshold page out of the tier
+  entirely (``engine.page_out_experts``); the first token routed back to
+  one pays the clock's ``cold_start_base`` and the ``page_in_protect``
+  hysteresis window keeps a freshly paged-in expert resident, so bursty
+  traffic never flaps an expert in and out.
+
+The three sub-controllers fire at most ONE action per control step and all
+share the engine's ``last_placement_change`` cooldown — server resizes,
+client churn, expert paging and live migrations never overlap.
+
 The loop is pure host-side policy over engine observables: deterministic
 under a virtual clock, and trivially swappable (subclass and override
-:meth:`desired_servers`).
+:meth:`desired_servers` / :meth:`desired_clients`).
 """
 
 from __future__ import annotations
@@ -18,6 +36,8 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import dataclass
 from typing import Deque, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.elastic import provision
 
@@ -30,6 +50,12 @@ class AutoscalerConfig:
     granularity: int = 1              # 1 = EAAS; group size = monolithic EP
     window: float = 0.25              # arrival-rate estimation window (s)
     cooldown: float = 0.2             # min time between scaling actions (s)
+    # scale-DOWN deadband (hysteresis): only shrink a tier when the
+    # observed rate fits the smaller capacity with this much headroom to
+    # spare (rate <= down_headroom * target * rate_per_unit).  Scale-up
+    # stays immediate.  Without it, Poisson arrival noise around a
+    # capacity boundary flaps the size A-B-A every cooldown.
+    down_headroom: float = 0.9
     queue_per_server: float = 0.0     # extra server per this much queue
                                       # backlog (0 disables queue pressure)
     # extra server per this many *unprefilled prompt tokens* (queued +
@@ -42,18 +68,47 @@ class AutoscalerConfig:
     # step earlier than queue/backlog pressure — the paper's point that
     # attention-tier memory, not expert FLOPs, caps admitted traffic.
     kv_pressure_threshold: float = 0.0
+    # --- attention-tier autoscaling (0 disables: servers only) -----------
+    rate_per_client: float = 0.0      # request/s one attention client takes
+    min_clients: int = 1
+    max_clients: int = 8
+    # extra client per this many requests parked in the cluster INGRESS
+    # queue (per-client backpressure pushed them back there) — the
+    # spawn-under-backpressure term (0 disables)
+    ingress_per_client: float = 0.0
+    # --- scale-to-zero experts (0 disables paging) -----------------------
+    # page out an expert whose traffic-EMA *share* sits below this fraction
+    # of the uniform share 1/E (e.g. 0.5 = pages experts drawing less than
+    # half their fair share); its first routed token pages it back in at
+    # the clock's cold_start_base penalty
+    expert_idle_fraction: float = 0.0
+    # hysteresis: an expert paged in less than this long ago never pages
+    # back out — with the EMA bump its own page-in traffic causes, this is
+    # what keeps a bursty expert from flapping in and out of the tier
+    page_in_protect: float = 0.5
+    # never page the resident set below this share of all experts
+    min_resident_fraction: float = 0.25
 
 
 class Autoscaler:
     """Traffic-driven pool resizing: observe arrivals, converge on
-    ``provision(rate)`` snapped to a feasible pool size."""
+    ``provision(rate)`` snapped to a feasible pool size; optionally also
+    steer the attention-client count and the resident expert set (see the
+    module docstring — one action per step, one shared cooldown)."""
 
     def __init__(self, cfg: AutoscalerConfig):
         self.cfg = cfg
+        # scenario `set_elastic` verb: False freezes every controller
+        # (servers, clients, expert paging) without detaching the trace
+        self.enabled = True
         self._arrivals: Deque[float] = deque()
         self._last_action = -float("inf")
         # (t, observed rate, desired, actual) decision trace
         self.trace: List[Tuple[float, float, int, int]] = []
+        # (t, desired clients, active clients) decision trace
+        self.client_trace: List[Tuple[float, int, int]] = []
+        # (t, experts paged out) action trace
+        self.page_trace: List[Tuple[float, int]] = []
 
     # ------------------------------------------------------------- signals
     def observe_arrival(self, t: float) -> None:
@@ -81,8 +136,66 @@ class Autoscaler:
             n += 1
         return max(c.min_servers, min(c.max_servers, n))
 
+    def desired_clients(self, t: float, ingress_depth: int = 0) -> int:
+        """Attention clients the observed rate needs, plus the ingress
+        backpressure term (requests the per-client admission caps pushed
+        back into the cluster queue mean the fleet is short)."""
+        c = self.cfg
+        n = provision(self.observed_rate(t), c.rate_per_client, 1)
+        if c.ingress_per_client > 0 and ingress_depth > 0:
+            n += int(ingress_depth / c.ingress_per_client)
+        return max(c.min_clients, min(c.max_clients, n))
+
+    def _down_ok(self, rate: float, target: int,
+                 per_unit: float) -> bool:
+        """Scale-down deadband: the smaller tier must absorb the observed
+        rate with ``down_headroom`` to spare, else hold the current size
+        (see the config comment — this is what keeps arrival noise around
+        a capacity boundary from flapping the size)."""
+        return rate <= self.cfg.down_headroom * target * per_unit
+
+    def _pageable_experts(self, engine, t: float) -> List[int]:
+        """Experts cold enough to page out: traffic-EMA share below
+        ``expert_idle_fraction / E``, outside the ``page_in_protect``
+        hysteresis window, respecting the ``min_resident_fraction`` floor.
+        Coldest first, deterministic tie-break on index."""
+        pool = engine.pool
+        ema = pool.stats.ema
+        if ema is None:
+            return []
+        total = float(np.sum(ema))
+        if total <= 0:
+            return []
+        E = len(ema)
+        share = np.asarray(ema, np.float64) / total
+        thresh = self.cfg.expert_idle_fraction / E
+        floor = max(1, int(np.ceil(self.cfg.min_resident_fraction * E)))
+        budget = (E - len(pool.cold)) - floor
+        if budget <= 0:
+            return []
+        out: List[int] = []
+        for e in sorted(range(E), key=lambda e: (share[e], e)):
+            if len(out) >= budget:
+                break
+            if e in pool.cold:
+                continue
+            if share[e] >= thresh:
+                break                    # ascending: nothing colder left
+            if t - pool.page_in_t.get(e, -float("inf")) \
+                    < self.cfg.page_in_protect:
+                continue                 # freshly paged in: protected
+            out.append(e)
+        return out
+
+    # ---------------------------------------------------------------- loop
     def step(self, engine, t: float) -> Optional[int]:
-        """One control iteration; returns the new pool size if it scaled."""
+        """One control iteration; returns the new pool size if the server
+        controller scaled (client/paging actions return None — read
+        ``client_trace`` / ``page_trace``).  At most one action fires per
+        step, and every action re-arms both the local and the shared
+        ``last_placement_change`` cooldown."""
+        if not self.enabled:
+            return None
         if engine.pool is None:
             return None
         if t < self.cfg.window:        # warm-up: the rate estimate is not
@@ -111,9 +224,38 @@ class Autoscaler:
         snapped = next((n for n in feasible if n >= want),
                        feasible[-1] if feasible else want)
         have = engine.pool.num_servers
-        self.trace.append((t, self.observed_rate(t), snapped, have))
-        if snapped == have or t - self._last_action < self.cfg.cooldown:
+        rate = self.observed_rate(t)
+        self.trace.append((t, rate, snapped, have))
+        if t - self._last_action < self.cfg.cooldown:
             return None
-        engine.scale_to(snapped)
-        self._last_action = t
-        return snapped
+        if snapped < have and not self._down_ok(rate, snapped,
+                                                self.cfg.rate_per_server):
+            snapped = have             # deadband: hold until it fits
+        if snapped != have:
+            engine.scale_to(snapped)
+            self._last_action = t
+            return snapped
+        # ---- attention tier (cluster targets only) ----------------------
+        if self.cfg.rate_per_client > 0 \
+                and hasattr(engine, "scale_clients"):
+            ingress = len(getattr(engine, "ingress", ()))
+            want_c = self.desired_clients(t, ingress)
+            have_c = engine.active_client_count()
+            self.client_trace.append((t, want_c, have_c))
+            if want_c < have_c and not self._down_ok(
+                    rate, want_c, self.cfg.rate_per_client):
+                want_c = have_c
+            if want_c != have_c:
+                engine.scale_clients(want_c)
+                self._last_action = t
+                return None
+        # ---- scale-to-zero experts --------------------------------------
+        if self.cfg.expert_idle_fraction > 0 \
+                and hasattr(engine, "page_out_experts"):
+            cold = self._pageable_experts(engine, t)
+            if cold:
+                paged = engine.page_out_experts(cold)
+                if paged:
+                    self.page_trace.append((t, len(paged)))
+                    self._last_action = t
+        return None

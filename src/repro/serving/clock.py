@@ -49,11 +49,12 @@ class Clock:
              contention: float = 1.0, straggle: float = 1.0) -> float:
         """End the bracket opened by :meth:`start`.
 
-        kind: "prefill" | "decode" | "migrate"; result: a jax array to
-        block on (wall clocks only); tokens: token work in the step (chunk
-        length for prefill — chunked prefill is charged per chunk, base
-        included — active slots for decode, expert-weight copies for
-        migrate); servers: expert-server pool size (the token work
+        kind: "prefill" | "decode" | "migrate" | "cold_start"; result: a
+        jax array to block on (wall clocks only); tokens: token work in the
+        step (chunk length for prefill — chunked prefill is charged per
+        chunk, base included — active slots for decode, expert-weight
+        copies for migrate, experts paged back in for cold_start);
+        servers: expert-server pool size (the token work
         parallelizes over it); alive_frac: alive share of the pool (EAAS
         failover slowdown); overlap: the step ran as two pipelined
         microbatches (client pipelining, paper §4.2) — virtual clocks
@@ -135,6 +136,13 @@ class VirtualClock(Clock):
     # default) keeps lane-mode timings bit-identical to the aggregate
     # per-server dispatch at lane_budget=1.
     lane_overhead: float = 0.0
+    # scale-to-zero experts (serverless paging à la MoEless): the first
+    # token routed to a paged-out expert stalls the dispatching step while
+    # the weights page back in — charged per expert via a stop("cold_start",
+    # tokens=n_paged_in).  0.0 (the default) keeps elastic timelines
+    # bit-identical to non-elastic ones, which is the identity contract
+    # benchmarks/elasticity.py gates on.
+    cold_start_base: float = 0.0
 
     def start(self) -> None:  # nothing to measure
         pass
@@ -147,6 +155,10 @@ class VirtualClock(Clock):
             # weight movement doesn't parallelize over the pool (each copy
             # lands on one server) and is unaffected by liveness
             return self.migrate_base + self.migrate_per_expert * tokens
+        if kind == "cold_start":
+            # expert page-ins are sequential weight fetches on the critical
+            # path of the step that routed to them; liveness is irrelevant
+            return self.cold_start_base * tokens
         # token work parallelizes over the expert-server pool (weak scaling);
         # the base covers attention/client work that does not.
         work = tokens / max(servers, 1)

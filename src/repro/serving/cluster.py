@@ -77,6 +77,11 @@ class ClusterConfig:
     # Off by default: per-client timelines are then bit-identical to the
     # same engine running standalone.
     charge_contention: bool = False
+    # attention-tier autoscaling ceiling: ``scale_clients`` may build NEW
+    # engines (join empty at cluster time) up to this many total.  None =
+    # the initial ``clients`` count — scale-up then only revives drained
+    # clients, never jit-builds mid-run.
+    max_clients: Optional[int] = None
     # the per-client engine template (mode must be eaas or monolithic_ep;
     # rebalance_interval > 0 enables the CLUSTER-level controller)
     engine: EngineConfig = field(default_factory=EngineConfig)
@@ -107,6 +112,10 @@ class Cluster:
         self.cfg = cfg
         self.ccfg = ccfg
         clock_factory = clock_factory or WallClock
+        # kept for lazily spawned clients (attention-tier scale-up past
+        # the initial fleet)
+        self._clock_factory = clock_factory
+        self._seed = seed
         # ---- the ONE expert tier ----------------------------------------
         self.pool = ServerPool(
             cfg, ecfg.num_servers,
@@ -138,6 +147,12 @@ class Cluster:
             params = eng.executor.params
             self.clients.append(eng)
         self.client_alive = [True] * ccfg.clients
+        # attention-tier elasticity state, orthogonal to the failure flag:
+        # draining = stop admitting, finish in-flight work, then park;
+        # parked = deprovisioned (not failed) — excluded from routing,
+        # stepping and the cluster time base until a spawn revives it
+        self.client_draining = [False] * ccfg.clients
+        self.client_parked = [False] * ccfg.clients
         # ---- front-end --------------------------------------------------
         self.router: FrontendRouter = make_frontend_router(
             ccfg.frontend_policy, ccfg.clients,
@@ -163,14 +178,28 @@ class Cluster:
             per_client=[c.metrics for c in self.clients],
             routed=[0] * ccfg.clients)
         self.step_idx = 0
+        # provisioned-resource accounting (the elasticity saving metric):
+        # integrate active clients + servers x resident-expert fraction
+        # over cluster time, change-points traced for windowed integrals
+        self._res_t = 0.0
+        self._res_units = self._provisioned_units()
+        self.metrics.resource_trace.append((0.0, self._res_units))
 
     # ------------------------------------------------------------- time
+    def _in_fleet(self, i: int) -> bool:
+        """Alive and not parked — the clients that step, route and gate
+        cluster time (a draining client is still in the fleet until its
+        in-flight work finishes)."""
+        return self.client_alive[i] and not self.client_parked[i]
+
     @property
     def clock(self) -> float:
-        """The cluster time base: the most-behind alive client (that is the
-        next client to act).  With no survivors, the latest client time."""
-        alive = [c.clock for c, ok in zip(self.clients, self.client_alive)
-                 if ok]
+        """The cluster time base: the most-behind in-fleet client (that is
+        the next client to act).  With no survivors, the latest client
+        time.  Parked clients are excluded — their clocks froze when they
+        drained out and must not hold cluster time back."""
+        alive = [c.clock for i, c in enumerate(self.clients)
+                 if self._in_fleet(i)]
         if alive:
             return min(alive)
         return max((c.clock for c in self.clients), default=0.0)
@@ -217,7 +246,9 @@ class Cluster:
         cap = self.ccfg.max_client_queue
         out = []
         for i, eng in enumerate(self.clients):
-            if not self.client_alive[i]:
+            if not self._in_fleet(i) or self.client_draining[i]:
+                # draining clients stop admitting: they finish their
+                # in-flight work and park (the elastic scale-down path)
                 continue
             if cap > 0 and len(eng.queue) >= cap:
                 continue
@@ -249,7 +280,7 @@ class Cluster:
         compile-time spikes without starving anyone.  When nobody has
         work, the most-behind client takes an idle step so time still
         advances toward the next scheduled arrival."""
-        alive = [i for i, ok in enumerate(self.client_alive) if ok]
+        alive = [i for i in range(len(self.clients)) if self._in_fleet(i)]
         if not alive:
             return None
         busy = [i for i in alive if self._has_work(self.clients[i])]
@@ -264,12 +295,12 @@ class Cluster:
     def _active_clients(self) -> int:
         """Clients with live work — the shared-tier contention factor."""
         n = sum(1 for i, eng in enumerate(self.clients)
-                if self.client_alive[i] and self._has_work(eng))
+                if self._in_fleet(i) and self._has_work(eng))
         return max(n, 1)
 
     def step(self) -> None:
         """One cluster iteration: route what the front-end can place, then
-        advance the most-behind alive client by one engine step."""
+        advance the most-behind in-fleet client by one engine step."""
         self.step_idx += 1
         self._route_ingress()
         i = self._next_client()
@@ -283,6 +314,8 @@ class Cluster:
             # ONE controller for the shared tier: migration chunks
             # interleave with whichever client steps next
             self.rebalancer.step(self)
+        self._retire_drained()
+        self._account_resources()
 
     def has_work(self) -> bool:
         """Anything outstanding anywhere (ingress, queues, slots) — the
@@ -300,8 +333,36 @@ class Cluster:
             if on_step:
                 on_step(self)
             self.step()
+        self._account_resources()
         self.metrics.wall_time = self.clock
         return self.metrics
+
+    # --------------------------------------------- resource accounting
+    def _provisioned_units(self) -> float:
+        """Resource units currently provisioned: in-fleet attention
+        clients (draining ones still hold their hardware) plus expert
+        servers weighted by the resident (non-paged-out) expert fraction.
+        The statically provisioned baseline holds this constant; the
+        elasticity saving is one minus the ratio of the two integrals."""
+        clients = sum(1 for i in range(len(self.clients))
+                      if self._in_fleet(i))
+        return float(clients
+                     + self.pool.num_servers * self.pool.resident_fraction())
+
+    def _account_resources(self) -> None:
+        """Integrate provisioned resource-units up to cluster time and
+        record a change-point whenever the provisioning level moved (the
+        interval since the last accounting is charged at the PREVIOUS
+        level — changes take effect from their change-point on)."""
+        now = self.clock
+        if now > self._res_t:
+            self.metrics.resource_seconds += \
+                (now - self._res_t) * self._res_units
+            self._res_t = now
+        units = self._provisioned_units()
+        if units != self._res_units:
+            self._res_units = units
+            self.metrics.resource_trace.append((now, units))
 
     # --------------------------------------------- shared-tier control
     def _pool_event(self, event: str, **kw) -> None:
@@ -450,6 +511,7 @@ class Cluster:
         if not self.client_alive[i]:
             return
         self.client_alive[i] = False
+        self.client_draining[i] = False  # a dead client drains nothing
         stranded = self.clients[i].abort_inflight()
         if not any(self.client_alive) and self.ingress:
             # nobody left to route to: the front-end sheds its ingress
@@ -468,15 +530,152 @@ class Cluster:
         if self.client_alive[i]:
             return
         self.client_alive[i] = True
-        now = max((c.clock for c, ok in zip(self.clients, self.client_alive)
-                   if ok), default=self.clients[i].clock)
+        now = self._fleet_frontier(default=self.clients[i].clock)
         self.clients[i].clock = max(self.clients[i].clock, now)
         self._pool_event("client_recover", client=i)
+
+    # --------------------------------------------- attention-tier elastic
+    def active_client_count(self) -> int:
+        """Clients serving AND admitting (not draining) — what the
+        autoscaler's client controller steers."""
+        return sum(1 for i in range(len(self.clients))
+                   if self._in_fleet(i) and not self.client_draining[i])
+
+    def _fleet_frontier(self, default: float = 0.0) -> float:
+        """The most-ahead in-fleet client's clock — where departing and
+        joining clients fast-forward to (join empty at cluster time)."""
+        return max((c.clock for i, c in enumerate(self.clients)
+                    if self._in_fleet(i)), default=default)
+
+    def _retire_drained(self) -> None:
+        """Park any draining client whose in-flight work has finished —
+        async waves complete through the normal event path (never
+        cancelled, so a drain loses zero tokens)."""
+        for i in range(len(self.clients)):
+            if self.client_draining[i] and self._in_fleet(i) \
+                    and not self._has_work(self.clients[i]):
+                self._park_client(i)
+
+    def _park_client(self, i: int) -> None:
+        self.client_draining[i] = False
+        self.client_parked[i] = True
+        # fast-forward the departing client to the cluster frontier so a
+        # later spawn rejoins at cluster time, never in the past
+        self.clients[i].clock = max(self.clients[i].clock,
+                                    self._fleet_frontier())
+        self.metrics.client_drains += 1
+        self._pool_event("client_drain", client=i)
+        self._account_resources()
+
+    def drain_client(self, i: int) -> bool:
+        """Elastically scale the attention tier DOWN by one client: ``i``
+        stops admitting immediately, finishes its queued requests and
+        in-flight async waves (completion events keep firing — nothing is
+        cancelled or stranded, unlike :meth:`fail_client`), then parks
+        fast-forwarded to the cluster frontier.  The last active client
+        never drains (someone must serve the ingress).  Returns whether
+        the drain started."""
+        self._check_client(i)
+        if not self._in_fleet(i) or self.client_draining[i]:
+            return False
+        if self.active_client_count() <= 1:
+            return False
+        self.client_draining[i] = True
+        self._pool_event("client_drain_begin", client=i)
+        if not self._has_work(self.clients[i]):
+            self._park_client(i)         # nothing in flight: park now
+        return True
+
+    def spawn_client(self) -> Optional[int]:
+        """Elastically scale the attention tier UP by one client: revive
+        the lowest-index parked client (it rejoins empty at cluster time),
+        or build a fresh engine over the shared params/pool/tier when the
+        fleet is still below ``max_clients``.  The front-end ring grows
+        deterministically — existing clients keep their indices, the new
+        index extends the ring.  Returns the client index, or None at the
+        ceiling."""
+        for i in range(len(self.clients)):
+            if self.client_parked[i] and self.client_alive[i]:
+                self.client_parked[i] = False
+                self.client_draining[i] = False
+                self.clients[i].clock = max(self.clients[i].clock,
+                                            self._fleet_frontier())
+                self.metrics.client_spawns += 1
+                self._pool_event("client_spawn", client=i)
+                self._account_resources()
+                return i
+        limit = self.ccfg.max_clients or self.ccfg.clients
+        if len(self.clients) >= limit:
+            return None
+        i = len(self.clients)
+        eng = ServingEngine(self.cfg, self.ccfg.engine,
+                            params=self.clients[0].executor.params,
+                            seed=self._seed, clock=self._clock_factory(),
+                            pool=self.pool.client_view(i), client_id=i,
+                            tier=self._tier)
+        if self.rebalancer is not None:
+            eng.track_imbalance = True
+        eng.clock = self._fleet_frontier()
+        # adopt the live straggler state (scenario slow_server events)
+        if self.clients:
+            eng.server_speed = self.clients[0].server_speed.copy()
+        self.clients.append(eng)
+        self.client_alive.append(True)
+        self.client_draining.append(False)
+        self.client_parked.append(False)
+        self.metrics.per_client.append(eng.metrics)
+        self.metrics.routed.append(0)
+        self.router.n_clients = len(self.clients)
+        self.metrics.client_spawns += 1
+        self._pool_event("client_spawn", client=i, built=True)
+        self._account_resources()
+        return i
+
+    def scale_clients(self, n: int) -> int:
+        """Drive the active client count toward ``n`` (the autoscaler's
+        attention-tier output): spawn parked/new clients to grow, drain
+        the highest-index active clients to shrink.  Bounded below by one
+        active client and above by ``max_clients``.  Any change stamps
+        ``last_placement_change`` so client churn, migrations and expert
+        page-ins coordinate through one cooldown.  Returns the active
+        count after the action."""
+        n = max(1, int(n))
+        changed = False
+        while self.active_client_count() < n:
+            if self.spawn_client() is None:
+                break
+            changed = True
+        active = [i for i in range(len(self.clients))
+                  if self._in_fleet(i) and not self.client_draining[i]]
+        for i in sorted(active, reverse=True)[:max(len(active) - n, 0)]:
+            changed |= self.drain_client(i)
+        if changed:
+            self.last_placement_change = self.clock
+        return self.active_client_count()
+
+    def page_out_experts(self, experts) -> List[int]:
+        """Scale-to-zero on the SHARED tier: evict cold experts' replica
+        slots from every client's executor in lockstep (the weight path is
+        the same fan-out migrations use).  Experts with in-flight work on
+        the shared tier lanes are skipped this round — eviction waits for
+        the lanes to drain.  Returns the experts actually paged out."""
+        ready = [e for e in experts
+                 if self._tier is None
+                 or not self._tier.expert_in_flight(e)]
+        paged, updates = self.pool.page_out_experts(ready)
+        if updates:
+            self.apply_migration(updates)
+        if paged:
+            self.last_placement_change = self.clock
+            self.metrics.expert_page_outs += len(paged)
+            self._pool_event("page_out", experts=len(paged))
+            self._account_resources()
+        return paged
 
     def set_frontend_policy(self, policy: str) -> None:
         """Swap the request-routing policy mid-run (fresh router state)."""
         self.router = make_frontend_router(
-            policy, self.ccfg.clients,
+            policy, len(self.clients),
             block_size=(self.ccfg.engine.kv_block_size
                         if self.ccfg.engine.kv_mode == "paged" else None))
         self._pool_event("set_frontend_policy", policy=policy)

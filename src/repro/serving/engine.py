@@ -532,6 +532,63 @@ class ServingEngine:
             return
         self.clock += dt
 
+    def page_out_experts(self, experts) -> list:
+        """Scale-to-zero: page cold experts out of the expert tier (their
+        replica bank slots are zeroed through the migration weight path,
+        the mapping keeps only the primary as the page-in source).  An
+        expert with in-flight work on its tier lanes is skipped this round
+        — eviction waits for the lanes to drain, never cancels them.  The
+        first token later routed to a paged-out expert pages it back in
+        and pays the clock's ``cold_start_base`` penalty.  Returns the
+        experts actually paged out."""
+        if self.pool is None:
+            return []
+        if self._shared_pool:
+            raise RuntimeError(
+                "this engine is a cluster client over a shared expert "
+                "tier — call Cluster.page_out_experts() so every client's "
+                "executor evicts in lockstep")
+        ready = [e for e in experts
+                 if self.tier is None or not self.tier.expert_in_flight(e)]
+        paged, updates = self.pool.page_out_experts(ready)
+        if updates:
+            self.apply_migration(updates)
+        if paged:
+            self.last_placement_change = self.clock
+            self.metrics.expert_page_outs += len(paged)
+            self.metrics.events.append(
+                {"t": self.clock, "event": "page_out",
+                 "experts": len(paged)})
+        return paged
+
+    def _charge_cold_starts(self, expert_load) -> float:
+        """Page in every cold expert this step's routed load touched and
+        return the modeled stall (``cold_start_base`` per expert; 0.0 —
+        the default — keeps elastic timelines bit-identical to non-elastic
+        ones).  Values never depend on residency: the primary shard stayed
+        addressable, so the tokens already computed exactly — only time
+        passes here."""
+        pool = self.pool
+        if pool is None:
+            return 0.0
+        cold = getattr(pool, "cold", None)
+        if not cold:
+            return 0.0
+        load = np.asarray(expert_load)
+        hits = sorted(e for e in cold if e < load.shape[0] and load[e] > 0)
+        if not hits:
+            return 0.0
+        for e in hits:
+            pool.page_in_expert(e, self.clock)
+        self.clk.start()
+        dt = self.clk.stop("cold_start", tokens=len(hits))
+        self.metrics.cold_starts += len(hits)
+        self.metrics.cold_start_time += dt
+        self.metrics.events.append(
+            {"t": self.clock, "event": "cold_start", "experts": len(hits),
+             "dt": dt})
+        return dt
+
     def rebalance(self) -> None:
         """One-shot EPLB replica re-planning from live traffic (paper
         §4.5) — the scripted/manual path.  Placement-identical plans are
@@ -659,6 +716,8 @@ class ServingEngine:
                                     tokens=plan.length,
                                     servers=self._pool_size(),
                                     alive_frac=self._alive_frac())
+        if expert_load is not None:
+            self.clock += self._charge_cold_starts(expert_load)
         self.scheduler.prefill_advanced(b, plan.length)
         if plan.is_last and not req.output_tokens:
             # same per-slot key the decode path uses (stored at admission),
@@ -715,6 +774,7 @@ class ServingEngine:
                            straggle=self._straggle())
         self._last_decode_time = dt
         self.clock += dt
+        self.clock += self._charge_cold_starts(expert_load)
         next_tokens = np.asarray(sample_batch(logits, temps,
                                               sch.slot_keys, steps))
 
@@ -796,6 +856,8 @@ class ServingEngine:
         dt = self.clk.stop("prefill", result=logits, tokens=plan.length,
                            servers=self._pool_size(),
                            alive_frac=self._alive_frac())
+        if expert_load is not None:
+            dt += self._charge_cold_starts(expert_load)
         first = None
         if plan.is_last and not req.output_tokens:
             key = jnp.asarray(self.scheduler.slot_keys[b])
@@ -883,6 +945,9 @@ class ServingEngine:
         af = self._alive_frac()
         client_dt, expert_dt = self.clk.decode_split(
             tokens=len(active), servers=S, alive_frac=af)
+        # a wave routing to paged-out experts stalls its own dispatch on
+        # the page-in: the client share absorbs the cold-start penalty
+        client_dt += self._charge_cold_starts(expert_load)
         t_dispatch = self.clock + client_dt
         self._client_free_at = t_dispatch
         wave_id = self._wave_counter

@@ -474,6 +474,20 @@ class AsyncExpertTier:
                     r, budget=self.lane_budget, free_at=float(now)))
         return moved
 
+    def expert_in_flight(self, expert: int) -> int:
+        """In-flight micro-batches across every server's lane for
+        ``expert`` — the scale-to-zero page-out gate: an expert only pages
+        out of the tier once its lanes have fully drained (nonzero means
+        the reconcile paths still owe it completions, so eviction waits a
+        round)."""
+        expert = int(expert)
+        n = 0
+        for q in self.queues:
+            ln = q.lanes.get(expert)
+            if ln is not None:
+                n += ln.in_flight()
+        return n
+
     # ----------------------------------------------------------- signals
     def queue_signals(self, now: float) -> Dict:
         """Live queueing-delay signals for the queue-aware rebalancer.

@@ -39,6 +39,10 @@ class ServingMetrics:
     kv_evictions: int = 0              # cached blocks reclaimed by the pool
     kv_cow_forks: int = 0              # copy-on-write block forks
     kv_peak_block_util: float = 0.0    # max live-block share over the run
+    # --- scale-to-zero experts (zero unless elasticity pages experts) ----
+    cold_starts: int = 0               # page-ins triggered by routed traffic
+    cold_start_time: float = 0.0       # seconds stalled on cold starts
+    expert_page_outs: int = 0          # experts this engine paged out
     # --- expert-balance gauges (the ExpertStats EMA surfaced per step) ---
     expert_imbalance: float = 1.0      # latest max/mean alive-server load
     peak_expert_imbalance: float = 1.0 # worst imbalance seen over the run
@@ -169,6 +173,13 @@ class ServingMetrics:
                                 for q in self.queue_delays]
             payload["queue_lanes"] = [list(self.queue_delay_servers),
                                       list(self.queue_delay_experts)]
+        if self.cold_starts or self.expert_page_outs:
+            # elasticity-only keys, same conditional scheme: a run that
+            # never pages an expert fingerprints byte-identically to the
+            # pre-elasticity format
+            payload["elastic"] = [self.cold_starts,
+                                  round(self.cold_start_time, ndigits),
+                                  self.expert_page_outs]
         blob = json.dumps(payload, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()
 
@@ -212,6 +223,12 @@ class ServingMetrics:
                 "queue_delay_p99_ms_by_server": {
                     k: round(v["p99"] * 1e3, 3)
                     for k, v in self.queue_delay_stats(by="server").items()},
+            }
+        if self.cold_starts or self.expert_page_outs:
+            out["elastic"] = {
+                "cold_starts": self.cold_starts,
+                "cold_start_time_s": round(self.cold_start_time, 4),
+                "expert_page_outs": self.expert_page_outs,
             }
         return out
 
@@ -268,6 +285,17 @@ class ClusterMetrics:
     rebalance_noops: int = 0
     migrated_experts: int = 0
     migration_time: float = 0.0
+    # --- full-system elasticity (client churn + provisioned resources) ---
+    client_spawns: int = 0              # clients (re)joining the fleet
+    client_drains: int = 0              # clients drained out of the fleet
+    expert_page_outs: int = 0           # experts paged out of the tier
+    # integral of provisioned resource units — active attention clients
+    # plus expert servers weighted by the resident expert fraction — over
+    # cluster time, with the (t, units) change-point trace behind the
+    # windowed integral ``resource_seconds_in`` (the elasticity
+    # benchmark's saving-vs-static headline)
+    resource_seconds: float = 0.0
+    resource_trace: List[Tuple[float, float]] = field(default_factory=list)
 
     # ------------------------------------------------------- aggregates
     @property
@@ -335,6 +363,32 @@ class ClusterMetrics:
         return max([c.peak_expert_imbalance for c in self.per_client],
                    default=1.0)
 
+    @property
+    def cold_starts(self) -> int:
+        return sum(c.cold_starts for c in self.per_client)
+
+    @property
+    def cold_start_time(self) -> float:
+        return sum(c.cold_start_time for c in self.per_client)
+
+    def resource_seconds_in(self, t0: float, t1: float) -> float:
+        """Provisioned resource-seconds over the window ``[t0, t1]`` by
+        step integration of the change-point trace (each segment's units
+        hold until the next change; the final segment extends to the run's
+        accounting frontier).  The elasticity benchmark uses this to pin
+        the off-peak-trough saving vs. a statically provisioned run."""
+        tr = self.resource_trace
+        if not tr:
+            return 0.0
+        total = 0.0
+        for i, (t, units) in enumerate(tr):
+            seg_end = tr[i + 1][0] if i + 1 < len(tr) \
+                else max(self.wall_time, t1)
+            lo, hi = max(t, t0), min(seg_end, t1)
+            if hi > lo:
+                total += (hi - lo) * units
+        return total
+
     def merged_timeline(self) -> List[Dict]:
         """All clients' step timelines merged on absolute time (stable:
         ties keep client order) — the cluster throughput record."""
@@ -371,6 +425,13 @@ class ClusterMetrics:
                         self.migrated_experts,
                         round(self.migration_time, ndigits)],
         }
+        if self.client_spawns or self.client_drains or self.expert_page_outs:
+            # elasticity-only key (conditional like the per-client scheme:
+            # a run with no client churn and no paging fingerprints
+            # byte-identically to the pre-elasticity format)
+            payload["elastic"] = [self.client_spawns, self.client_drains,
+                                  self.expert_page_outs,
+                                  round(self.resource_seconds, ndigits)]
         blob = json.dumps(payload, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()
 
@@ -407,5 +468,14 @@ class ClusterMetrics:
             out["kv"] = {
                 "prefix_hit_rate": round(self.prefix_hit_rate, 4),
                 "preemptions": self.preemptions,
+            }
+        if self.client_spawns or self.client_drains or self.expert_page_outs:
+            out["elastic"] = {
+                "client_spawns": self.client_spawns,
+                "client_drains": self.client_drains,
+                "expert_page_outs": self.expert_page_outs,
+                "cold_starts": self.cold_starts,
+                "cold_start_time_s": round(self.cold_start_time, 4),
+                "resource_seconds": round(self.resource_seconds, 3),
             }
         return out

@@ -117,7 +117,8 @@ def sample_arrival_times(rate_fn: RateFn, horizon: float,
 class ScenarioEvent:
     t: float
     # fail | recover | rebalance | scale_to | set_policy | set_skew |
-    # slow_server | fail_client | recover_client | set_frontend_policy
+    # slow_server | fail_client | recover_client | set_frontend_policy |
+    # set_elastic
     kind: str
     value: Optional[object] = None     # rank / client / pool size / policy
 
@@ -276,10 +277,26 @@ class Scenario:
             rotation += 1
         return self
 
-    def autoscale(self, autoscaler) -> "Scenario":
+    def autoscale(self, autoscaler, min_clients: int = None,
+                  max_clients: int = None) -> "Scenario":
         """Attach an :class:`~repro.serving.autoscale.Autoscaler` policy loop
-        (observed each step; scaling decisions become engine.scale_to)."""
+        (observed each step; scaling decisions become engine.scale_to /
+        engine.scale_clients / engine.page_out_experts).  ``min_clients`` /
+        ``max_clients`` bound the attention-tier controller inline —
+        scenario-level overrides of the autoscaler config."""
+        if min_clients is not None:
+            autoscaler.cfg.min_clients = int(min_clients)
+        if max_clients is not None:
+            autoscaler.cfg.max_clients = int(max_clients)
         self._autoscaler = autoscaler
+        return self
+
+    def set_elastic(self, t: float, enabled: bool = True) -> "Scenario":
+        """Freeze/unfreeze the attached autoscaler at ``t`` (all three
+        controllers: servers, clients, expert paging).  A scenario can
+        script a static warm-up phase, then flip elasticity on."""
+        self.events.append(ScenarioEvent(float(t), "set_elastic",
+                                         bool(enabled)))
         return self
 
     def shared_prefix(self, n_prefixes: int, prefix_len: int,
@@ -385,6 +402,11 @@ class Scenario:
                     "(N attention clients); got a single-client engine — "
                     "wrap it in repro.serving.Cluster")
             getattr(engine, ev.kind)(ev.value)
+        elif ev.kind == "set_elastic":
+            if self._autoscaler is None:
+                raise ValueError("set_elastic needs an attached autoscaler "
+                                 "(call .autoscale(...) first)")
+            self._autoscaler.enabled = bool(ev.value)
         elif ev.kind == "set_skew":
             if engine.cfg.moe is None:
                 return

@@ -1,0 +1,355 @@
+"""Full-system elasticity edge battery: scale-to-zero experts + attention
+client churn, all under the deterministic virtual clock.
+
+The load-bearing contracts:
+
+* **page-out is resource policy, never a model change** — evicting a cold
+  expert removes only its replica slots; the primary shard stays
+  addressable as the page-in source, so token streams are bitwise
+  identical with ``cold_start_base = 0`` and the modeled penalty
+  (``cold_start_base > 0``) only moves time;
+* **page-in races an in-flight rebalance chunk safely** — a staged
+  migration keeps applying while an expert pages out and back in;
+* **client drain loses nothing** — a drained client stops admitting,
+  finishes its in-flight async waves, then parks: zero failed requests
+  and identical tokens;
+* **hysteresis never flaps** — on a constant-rate uniform trace the
+  controller settles and stops acting;
+* the ``set_elastic`` scenario verb freezes/unfreezes every controller.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving import (Cluster, ClusterConfig, EngineConfig, Request,
+                           SamplingParams, Scenario, ServingEngine,
+                           VirtualClock)
+from repro.serving.autoscale import Autoscaler, AutoscalerConfig
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("deepseek-r1").reduced()
+
+
+def _ecfg(**kw):
+    kw.setdefault("mode", "eaas")
+    kw.setdefault("num_servers", 4)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("n_redundant", 2)
+    # drop-free dispatch: the identity pins require placement/routing to
+    # never change which tokens reach their experts
+    kw.setdefault("pool_tokens_per_client", 16)
+    return EngineConfig(**kw)
+
+
+def _engine(cfg, cold_start_base=0.0, **kw):
+    return ServingEngine(cfg, _ecfg(**kw), seed=0,
+                         clock=VirtualClock(cold_start_base=cold_start_base))
+
+
+def _requests(cfg, n, max_new=6, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, cfg.vocab_size, size=8).astype(
+        np.int32), SamplingParams(max_new_tokens=max_new))
+        for i in range(n)]
+
+
+def _tokens(reqs):
+    return {r.request_id: tuple(r.output_tokens) for r in reqs}
+
+
+def _run(eng, cfg, n=8, on_step=None, **kw):
+    reqs = _requests(cfg, n, **kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=4000, on_step=on_step)
+    return reqs
+
+
+# --------------------------------------------------- scale-to-zero experts
+
+def test_page_out_masks_replicas_keeps_primary(cfg):
+    eng = _engine(cfg)
+    _run(eng, cfg, n=4)
+    E = cfg.moe.num_experts
+    paged = eng.page_out_experts([0, 1])
+    assert paged == [0, 1]
+    pool = eng.pool
+    assert pool.cold == {0, 1}
+    assert pool.resident_fraction() == (E - 2) / E
+    # replicas gone, primary-only rows remain as the page-in source
+    assert not np.any(pool.redundant_table == 0)
+    assert not np.any(pool.redundant_table == 1)
+    for e in (0, 1):
+        row = pool.smap.table[e]
+        assert (row >= 0).sum() == 1
+    # a cold expert's load is masked out of the next replica plan
+    mapping, red = pool.plan()
+    assert not np.any(red == 0) and not np.any(red == 1)
+
+
+def test_cold_identity_and_penalty(cfg):
+    """cold_start_base=0 -> bitwise identity; >0 -> same tokens, more
+    time, cold starts charged."""
+    def run(cold_start_base, page):
+        eng = _engine(cfg, cold_start_base=cold_start_base)
+
+        def on_step(e):
+            if page and e.step_idx == 6:
+                e.page_out_experts(list(range(cfg.moe.num_experts)))
+        reqs = _run(eng, cfg, n=8, on_step=on_step)
+        return eng, _tokens(reqs)
+
+    base_eng, base_tok = run(0.0, page=False)
+    free_eng, free_tok = run(0.0, page=True)
+    paid_eng, paid_tok = run(5e-3, page=True)
+    assert free_tok == base_tok                 # the tentpole identity pin
+    assert paid_tok == base_tok                 # penalty moves time only
+    assert free_eng.metrics.expert_page_outs > 0
+    assert free_eng.metrics.cold_starts > 0     # traffic paged them back
+    assert free_eng.metrics.cold_start_time == 0.0
+    assert paid_eng.metrics.cold_start_time > 0.0
+    assert paid_eng.clock > free_eng.clock
+    # every touched expert paged back in resident
+    assert paid_eng.pool.cold.isdisjoint(
+        set(np.flatnonzero(paid_eng.pool.stats.ema)))
+
+
+def test_page_in_race_with_inflight_rebalance_chunk(cfg):
+    """An expert pages out and back in while a staged migration still has
+    chunks pending — the chunk stream keeps applying and tokens match the
+    undisturbed run."""
+    import dataclasses
+    from repro.serving import zipf_bias
+    cfg16 = cfg.replace(moe=dataclasses.replace(cfg.moe, num_experts=16))
+
+    def run(disturb):
+        ecfg = EngineConfig(
+            mode="eaas", num_servers=4, max_batch=8, max_seq=64,
+            n_redundant=2, pool_tokens_per_client=32,
+            charge_imbalance=True, rebalance_interval=0.02,
+            rebalance_chunk=1)
+        eng = ServingEngine(cfg16, ecfg, seed=0, clock=VirtualClock(
+            decode_base=2e-4, decode_per_token=2e-3, expert_share=0.8,
+            cold_start_base=1e-3))
+        eng.set_skew(zipf_bias(16, 1.2, scale=1.0))
+        hit = {"paged": False, "saw_pending": False}
+
+        def on_step(e):
+            if not disturb or hit["paged"]:
+                return
+            if e.rebalancer.migrating:    # a chunked migration is staged
+                hit["saw_pending"] = True
+                # page out the HOTTEST experts: the next decode step is
+                # guaranteed to touch them, forcing the page-in while
+                # migration chunks are still pending
+                ema = e.pool.stats.ema
+                hot = sorted(range(16), key=lambda x: -ema[x])[:4]
+                if e.page_out_experts(hot):
+                    hit["paged"] = True
+        reqs = _run(eng, cfg16, n=16, max_new=24, seed=7,
+                    on_step=on_step)
+        return eng, hit, _tokens(reqs)
+
+    clean_eng, _, clean_tok = run(disturb=False)
+    race_eng, hit, race_tok = run(disturb=True)
+    assert hit["saw_pending"] and hit["paged"]
+    assert race_tok == clean_tok
+    assert race_eng.metrics.expert_page_outs > 0
+    assert race_eng.metrics.cold_starts > 0    # the hot set came back
+    assert race_eng.metrics.completed == 16
+    # consistency after the dust settles: every still-cold expert has no
+    # replica column and a primary-only mapping row
+    pool = race_eng.pool
+    for e in pool.cold:
+        assert (pool.smap.table[e] >= 0).sum() == 1
+
+
+def test_pool_resize_resets_cold_set(cfg):
+    eng = _engine(cfg)
+    _run(eng, cfg, n=4)
+    eng.page_out_experts([0, 1, 2])
+    assert eng.pool.cold
+    eng.scale_to(2)
+    assert eng.pool.cold == set()      # resize re-provisions everything
+    assert eng.pool.resident_fraction() == 1.0
+
+
+# ------------------------------------------------------------ client churn
+
+def _cluster(cfg, n, max_clients=None, exec_mode="async", **ekw):
+    return Cluster(cfg, ClusterConfig(
+        clients=n, engine=_ecfg(exec_mode=exec_mode, async_depth=2, **ekw),
+        max_clients=max_clients), seed=0, clock_factory=VirtualClock)
+
+
+def test_drain_with_inflight_async_waves_loses_nothing(cfg):
+    """Drain mid-flight: the departing client finishes its pipelined
+    waves, parks, and every token matches the no-drain run."""
+    def run(drain):
+        cl = _cluster(cfg, 2)
+        reqs = _requests(cfg, 10, max_new=8)
+        for r in reqs:
+            cl.submit(r)
+        state = {"drained": False}
+
+        def on_step(c):
+            if drain and not state["drained"] and c.step_idx >= 4:
+                # client 1 must have waves in flight for the edge to bite
+                if c.clients[1].tier is not None and c.client_alive[1]:
+                    state["drained"] = c.drain_client(1)
+        cl.run(max_steps=4000, on_step=on_step)
+        return cl, state, _tokens(reqs)
+
+    clean_cl, _, clean_tok = run(drain=False)
+    drain_cl, state, drain_tok = run(drain=True)
+    assert state["drained"]
+    assert drain_cl.client_parked[1]
+    assert drain_tok == clean_tok
+    m = drain_cl.metrics
+    assert m.failed_requests == 0
+    assert m.completed == clean_cl.metrics.completed == 10
+    assert m.client_drains == 1
+    # the parked client's frozen clock no longer pins cluster time
+    assert drain_cl.clock >= drain_cl.clients[0].clock
+
+
+def test_drain_refuses_last_active_client(cfg):
+    cl = _cluster(cfg, 2)
+    assert cl.drain_client(1)
+    assert not cl.drain_client(0)      # someone must keep serving
+    assert cl.active_client_count() == 1
+
+
+def test_spawn_revives_parked_then_builds_new(cfg):
+    cl = _cluster(cfg, 2, max_clients=3)
+    reqs = _requests(cfg, 6)
+    for r in reqs:
+        cl.submit(r)
+    cl.run(max_steps=4000)
+    assert cl.drain_client(1)
+    cl.step()                          # idle drain parks immediately
+    assert cl.client_parked[1]
+    assert cl.spawn_client() == 1      # lowest parked index revives first
+    assert not cl.client_parked[1]
+    i = cl.spawn_client()              # fresh engine joins the ring
+    assert i == 2
+    assert len(cl.clients) == 3
+    assert cl.router.n_clients == 3
+    assert cl.clients[2]._shared_pool  # shares the one expert tier
+    assert cl.spawn_client() is None   # max_clients cap
+    more = _requests(cfg, 6, seed=9)
+    for r in more:
+        r.request_id += 50
+        cl.submit(r)
+    cl.run(max_steps=4000)
+    assert cl.metrics.failed_requests == 0
+    assert sum(len(t) for t in _tokens(more).values()) > 0
+
+
+# -------------------------------------------------------- controller loop
+
+def test_autoscaler_no_flap_on_constant_rate(cfg):
+    """Constant-rate uniform traffic: after the initial convergence the
+    controller goes quiet — no server oscillation, no client churn, no
+    expert paging (uniform share >= the idle threshold)."""
+    cl = _cluster(cfg, 2, max_clients=2)
+    scaler = Autoscaler(AutoscalerConfig(
+        rate_per_server=30.0, min_servers=1, max_servers=4,
+        # a long-enough rate window plus the down_headroom deadband is
+        # what keeps Poisson arrival noise from flapping the size
+        window=0.5, cooldown=0.05,
+        rate_per_client=30.0, min_clients=1, max_clients=2))
+    sc = (Scenario(horizon=0.8, seed=11, prompt_len=8, max_new=6,
+                   vocab=cfg.vocab_size).poisson(rate=20.0)
+          .autoscale(scaler))
+    sc.run(cl, max_steps=20_000)
+    m = cl.metrics
+    # the pool-size sequence settles monotonically: no value is ever
+    # revisited after leaving it (A-B-A flapping)
+    sizes = [actual for _, _, _, actual in scaler.trace]
+    compact = [s for i, s in enumerate(sizes)
+               if i == 0 or s != sizes[i - 1]]
+    assert len(compact) == len(set(compact)), compact
+    assert compact[-1] < 4                     # it did scale down, once
+    # client decisions likewise settle to one steady value
+    wants = [w for _, w, _ in scaler.client_trace]
+    assert len(set(wants[len(wants) // 2:])) <= 1
+    assert m.client_spawns + m.client_drains <= 1
+
+
+def test_page_protect_window_blocks_flap(cfg):
+    """Hysteresis at the expert level: a freshly paged-in expert is
+    protected from paging back out until ``page_in_protect`` elapses."""
+    eng = _engine(cfg)
+    _run(eng, cfg, n=2)
+    pool = eng.pool
+    E = cfg.moe.num_experts
+    pool.stats.ema = np.ones(E)
+    pool.stats.ema[0] = 1e-3                   # expert 0: cold by traffic
+    scaler = Autoscaler(AutoscalerConfig(
+        rate_per_server=1e9, expert_idle_fraction=0.5,
+        page_in_protect=0.5))
+    t = eng.clock
+    assert 0 in scaler._pageable_experts(eng, t)
+    eng.page_out_experts([0])
+    assert 0 not in scaler._pageable_experts(eng, t)   # already cold
+    pool.page_in_expert(0, t)
+    assert 0 not in scaler._pageable_experts(eng, t + 0.4)  # protected
+    assert 0 in scaler._pageable_experts(eng, t + 0.6)      # expired
+
+
+def test_set_elastic_verb_freezes_and_resumes(cfg):
+    def run(freeze):
+        cl = _cluster(cfg, 2, max_clients=2)
+        scaler = Autoscaler(AutoscalerConfig(
+            rate_per_server=12.0, min_servers=1, max_servers=4,
+            window=0.1, cooldown=0.1,
+            rate_per_client=20.0, min_clients=1, max_clients=2,
+            expert_idle_fraction=0.5, page_in_protect=0.2))
+        sc = (Scenario(horizon=1.0, seed=1, prompt_len=8, max_new=8,
+                       vocab=cfg.vocab_size)
+              .diurnal(40, amplitude=0.9, period=1.0)
+              .zipf_skew(1.2, scale=3.0)
+              .autoscale(scaler))
+        if freeze:
+            sc.set_elastic(0.0, False)
+        res = sc.run(cl, max_steps=20_000)
+        return cl, _tokens(res.requests)
+
+    live_cl, live_tok = run(freeze=False)
+    froz_cl, froz_tok = run(freeze=True)
+    # frozen controllers: statically provisioned run, to the token
+    assert froz_cl.metrics.expert_page_outs == 0
+    assert froz_cl.metrics.client_drains == 0
+    assert froz_cl.pool.num_servers == 4
+    assert live_cl.metrics.expert_page_outs > 0
+    assert froz_tok == live_tok        # policy freeze is not a model change
+    assert froz_cl.metrics.resource_seconds \
+        > live_cl.metrics.resource_seconds
+
+
+def test_set_elastic_requires_autoscaler(cfg):
+    cl = _cluster(cfg, 1)
+    sc = (Scenario(horizon=0.05, seed=1, vocab=cfg.vocab_size)
+          .poisson(rate=40).set_elastic(0.0, False))
+    with pytest.raises(ValueError):
+        sc.run(cl, max_steps=2000)
+
+
+def test_resource_trace_windowed_integration(cfg):
+    cl = _cluster(cfg, 2)
+    reqs = _requests(cfg, 6)
+    for r in reqs:
+        cl.submit(r)
+    cl.run(max_steps=4000)
+    m = cl.metrics
+    # static fleet: units constant at clients + servers
+    assert m.resource_trace[0] == (0.0, 2 + 4)
+    total = m.wall_time * 6
+    assert m.resource_seconds == pytest.approx(total, rel=1e-6)
+    half = m.resource_seconds_in(0.0, m.wall_time / 2)
+    assert half == pytest.approx(total / 2, rel=1e-6)

@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""Benchmark trajectory: append dated per-benchmark summary records to the
+committed ``BENCH_trajectory.json``.
+
+The nightly workflow runs the gated smokes, then::
+
+    python tools/bench_history.py --append --date $(date -u +%F)
+
+which appends one record per benchmark JSON under ``experiments/bench/``
+(headline numbers only — throughput, p99 ITL, resource saving — pulled
+from the ``gate.tolerance`` section so the schema tracks whatever each
+benchmark already pins) and commits the file back.  Re-appending the same
+(date, benchmark) pair replaces the old record, so a rerun nightly never
+duplicates.
+
+``--show`` prints the trajectory one line per record (date benchmark
+k=v ...) for eyeballing trends without JSON spelunking.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+TRAJECTORY = "BENCH_trajectory.json"
+BENCH_DIR = os.path.join("experiments", "bench")
+# headline gate.tolerance keys worth tracking over time; everything else
+# (ratios, raw resource-seconds) stays in the per-run JSON
+HEADLINE_TAGS = ("tok_per_s", "p99", "saving")
+
+
+def load_trajectory(path: str) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        doc = json.load(f)
+    return doc.get("records", [])
+
+
+def summarize(doc: Dict) -> Dict[str, float]:
+    tol = (doc.get("gate") or {}).get("tolerance", {})
+    return {k: round(float(v), 6) for k, v in sorted(tol.items())
+            if any(tag in k for tag in HEADLINE_TAGS)}
+
+
+def append_records(traj_path: str, bench_dir: str, date: str) -> int:
+    records = load_trajectory(traj_path)
+    added = 0
+    for path in sorted(glob.glob(os.path.join(bench_dir, "*.json"))):
+        name = os.path.splitext(os.path.basename(path))[0]
+        with open(path) as f:
+            doc = json.load(f)
+        metrics = summarize(doc)
+        if not metrics:        # no gate → not a tracked benchmark
+            continue
+        rec = {"date": date, "benchmark": name, "metrics": metrics}
+        env = doc.get("env")
+        if env:
+            rec["jax"] = env.get("jax")
+        records = [r for r in records
+                   if not (r["date"] == date and r["benchmark"] == name)]
+        records.append(rec)
+        added += 1
+    records.sort(key=lambda r: (r["date"], r["benchmark"]))
+    with open(traj_path, "w") as f:
+        json.dump({"records": records}, f, indent=1)
+        f.write("\n")
+    print(f"bench_history: {added} record(s) for {date} -> {traj_path} "
+          f"({len(records)} total)")
+    return 0 if added else 1
+
+
+def show(traj_path: str) -> int:
+    for r in load_trajectory(traj_path):
+        kv = " ".join(f"{k}={v:g}" for k, v in r["metrics"].items())
+        print(f"{r['date']} {r['benchmark']}: {kv}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="benchmark trajectory log")
+    ap.add_argument("--append", action="store_true",
+                    help="append one dated record per benchmark JSON")
+    ap.add_argument("--show", action="store_true",
+                    help="print the trajectory, one line per record")
+    ap.add_argument("--date", default=None,
+                    help="record date (YYYY-MM-DD; required with "
+                         "--append so reruns are reproducible)")
+    ap.add_argument("--dir", default=BENCH_DIR,
+                    help="directory of benchmark JSONs to summarize "
+                         f"(default {BENCH_DIR})")
+    ap.add_argument("--trajectory", default=TRAJECTORY,
+                    help=f"trajectory file (default {TRAJECTORY})")
+    args = ap.parse_args(argv)
+    if args.show:
+        return show(args.trajectory)
+    if args.append:
+        if not args.date:
+            ap.error("--append requires --date YYYY-MM-DD")
+        return append_records(args.trajectory, args.dir, args.date)
+    ap.error("one of --append / --show required")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,6 @@
 #!/usr/bin/env python
-"""CI benchmark-regression gate: compare a benchmark's JSON against its
-committed baseline.
+"""CI benchmark-regression gate: compare benchmark JSONs against their
+committed baselines.
 
 Contract: the benchmark JSON carries a top-level ``gate`` object::
 
@@ -21,11 +21,27 @@ Every key present in the *baseline* must be present and conforming in the
 current run; extra keys in the current run are reported but pass (so a
 benchmark can grow new metrics before its baseline is refreshed).
 
+The JSONs also carry a top-level ``env`` stamp (resolved jax / jaxlib /
+python versions, written by ``benchmarks.common.save_result``).  Exact
+fingerprints are only stable within one resolved jax build — the versions
+the baselines were generated with are pinned in ``constraints.txt`` — so
+on an exact-key failure with mismatched envs the report names the version
+drift instead of leaving a bare fingerprint diff.
+
 Usage::
 
+    # one benchmark:
     python tools/check_bench.py \
         --current experiments/bench/expert_balance.json \
         --baseline experiments/baselines/expert_balance.json
+
+    # every committed baseline at once (the registry-driven CI lane —
+    # pairs experiments/baselines/*.json with experiments/bench/*.json):
+    python tools/check_bench.py --all
+
+    # determinism: two runs of the same smoke must agree on EVERY gate
+    # key bit-for-bit (tolerance keys included — same build, same seed):
+    python tools/check_bench.py --compare run_a.json run_b.json
 
     # refresh a baseline after an intentional change:
     python tools/check_bench.py --current ... --baseline ... \
@@ -37,21 +53,44 @@ Exit status: 0 = pass, 1 = regression, 2 = bad invocation / missing file.
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
 import shutil
 import sys
 from typing import Dict, List, Tuple
 
+BENCH_DIR = os.path.join("experiments", "bench")
+BASELINES_DIR = os.path.join("experiments", "baselines")
 
-def load_gate(path: str) -> Tuple[Dict, Dict]:
+
+def load_doc(path: str) -> Dict:
     with open(path) as f:
-        doc = json.load(f)
+        return json.load(f)
+
+
+def gate_of(doc: Dict, path: str) -> Tuple[Dict, Dict]:
     gate = doc.get("gate")
     if not isinstance(gate, dict):
         raise ValueError(f"{path}: no 'gate' object — the benchmark does "
                          "not participate in the regression lane")
     return gate.get("exact", {}), gate.get("tolerance", {})
+
+
+def env_note(base_doc: Dict, cur_doc: Dict) -> List[str]:
+    """Name the resolved-version drift when the two runs disagree (the
+    usual cause of an otherwise-mysterious fingerprint mismatch)."""
+    base_env = base_doc.get("env") or {}
+    cur_env = cur_doc.get("env") or {}
+    out = []
+    for key in sorted(set(base_env) | set(cur_env)):
+        b, c = base_env.get(key, "?"), cur_env.get(key, "?")
+        if b != c:
+            out.append(f"env '{key}': baseline built with {b}, current "
+                       f"run has {c} — exact fingerprints are only "
+                       "stable within one resolved build; pin via "
+                       "constraints.txt or refresh the baseline")
+    return out
 
 
 def compare(base_exact: Dict, base_tol: Dict, cur_exact: Dict,
@@ -85,49 +124,23 @@ def compare(base_exact: Dict, base_tol: Dict, cur_exact: Dict,
     return failures, notes
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(
-        description="benchmark JSON regression gate")
-    ap.add_argument("--current", required=True,
-                    help="JSON written by the benchmark run under test")
-    ap.add_argument("--baseline", required=True,
-                    help="committed baseline JSON "
-                         "(experiments/baselines/*.json)")
-    ap.add_argument("--tolerance", type=float, default=0.2,
-                    help="max relative drift for tolerance keys "
-                         "(default 0.2)")
-    ap.add_argument("--write-baseline", action="store_true",
-                    help="copy the current JSON over the baseline "
-                         "(intentional-change update flow) and exit 0")
-    args = ap.parse_args(argv)
-
-    if not os.path.exists(args.current):
-        print(f"check_bench: current run {args.current} not found "
+def check_pair(current: str, baseline: str, tolerance: float) -> int:
+    if not os.path.exists(current):
+        print(f"check_bench: current run {current} not found "
               "(did the benchmark run?)", file=sys.stderr)
         return 2
-
-    if args.write_baseline:
-        os.makedirs(os.path.dirname(args.baseline) or ".", exist_ok=True)
-        shutil.copyfile(args.current, args.baseline)
-        print(f"check_bench: baseline {args.baseline} refreshed from "
-              f"{args.current}")
-        return 0
-
-    if not os.path.exists(args.baseline):
-        print(f"check_bench: baseline {args.baseline} not found — commit "
-              "one with --write-baseline", file=sys.stderr)
-        return 2
-
     try:
-        base_exact, base_tol = load_gate(args.baseline)
-        cur_exact, cur_tol = load_gate(args.current)
+        base_doc, cur_doc = load_doc(baseline), load_doc(current)
+        base_exact, base_tol = gate_of(base_doc, baseline)
+        cur_exact, cur_tol = gate_of(cur_doc, current)
     except (ValueError, json.JSONDecodeError) as e:
         print(f"check_bench: {e}", file=sys.stderr)
         return 2
-
     failures, notes = compare(base_exact, base_tol, cur_exact, cur_tol,
-                              args.tolerance)
-    name = os.path.basename(args.baseline)
+                              tolerance)
+    if any(f.startswith("exact") for f in failures):
+        failures.extend(env_note(base_doc, cur_doc))
+    name = os.path.basename(baseline)
     for line in notes:
         print(f"  [ok] {line}")
     if failures:
@@ -138,6 +151,109 @@ def main(argv=None) -> int:
     print(f"check_bench: {name}: pass ({len(base_exact)} exact, "
           f"{len(base_tol)} toleranced keys)")
     return 0
+
+
+def check_all(tolerance: float) -> int:
+    """The registry-driven lane: every committed baseline gates the
+    matching fresh smoke JSON.  A baseline with no current run is a hard
+    failure — the smoke either crashed or was never registered."""
+    baselines = sorted(glob.glob(os.path.join(BASELINES_DIR, "*.json")))
+    if not baselines:
+        print(f"check_bench: no baselines under {BASELINES_DIR}",
+              file=sys.stderr)
+        return 2
+    worst = 0
+    for baseline in baselines:
+        current = os.path.join(BENCH_DIR, os.path.basename(baseline))
+        worst = max(worst, check_pair(current, baseline, tolerance))
+    if worst == 0:
+        print(f"check_bench: all {len(baselines)} gated benchmarks pass")
+    return worst
+
+
+def check_identical(path_a: str, path_b: str) -> int:
+    """Determinism lane: two runs of the same smoke on the same build must
+    agree on every gate key bit-for-bit (tolerance keys included — under
+    a virtual clock there is nothing to tolerate)."""
+    for p in (path_a, path_b):
+        if not os.path.exists(p):
+            print(f"check_bench: {p} not found", file=sys.stderr)
+            return 2
+    try:
+        doc_a, doc_b = load_doc(path_a), load_doc(path_b)
+        exact_a, tol_a = gate_of(doc_a, path_a)
+        exact_b, tol_b = gate_of(doc_b, path_b)
+    except (ValueError, json.JSONDecodeError) as e:
+        print(f"check_bench: {e}", file=sys.stderr)
+        return 2
+    failures: List[str] = []
+    for section, a, b in (("exact", exact_a, exact_b),
+                          ("tolerance", tol_a, tol_b)):
+        for key in sorted(set(a) | set(b)):
+            if key not in a or key not in b:
+                failures.append(f"{section} '{key}': present in only one "
+                                "run")
+            elif a[key] != b[key]:
+                failures.append(f"{section} '{key}': {a[key]!r} != "
+                                f"{b[key]!r}")
+    name = os.path.basename(path_a)
+    if failures:
+        failures.extend(env_note(doc_a, doc_b))
+        print(f"check_bench: {name}: NOT deterministic — "
+              f"{len(failures)} diff(s):")
+        for line in failures:
+            print(f"  [FAIL] {line}")
+        return 1
+    print(f"check_bench: {name}: deterministic "
+          f"({len(exact_a)} exact, {len(tol_a)} toleranced keys agree)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="benchmark JSON regression gate")
+    ap.add_argument("--current",
+                    help="JSON written by the benchmark run under test")
+    ap.add_argument("--baseline",
+                    help="committed baseline JSON "
+                         "(experiments/baselines/*.json)")
+    ap.add_argument("--all", action="store_true",
+                    help="gate every experiments/baselines/*.json against "
+                         "the matching experiments/bench/*.json")
+    ap.add_argument("--compare", nargs=2, metavar=("A", "B"),
+                    help="determinism check: two runs of the same smoke "
+                         "must agree on every gate key bit-for-bit")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="max relative drift for tolerance keys "
+                         "(default 0.2)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="copy the current JSON over the baseline "
+                         "(intentional-change update flow) and exit 0")
+    args = ap.parse_args(argv)
+
+    if args.compare:
+        return check_identical(*args.compare)
+    if args.all:
+        return check_all(args.tolerance)
+    if not args.current or not args.baseline:
+        ap.error("--current/--baseline required (or use --all/--compare)")
+
+    if args.write_baseline:
+        if not os.path.exists(args.current):
+            print(f"check_bench: current run {args.current} not found",
+                  file=sys.stderr)
+            return 2
+        os.makedirs(os.path.dirname(args.baseline) or ".", exist_ok=True)
+        shutil.copyfile(args.current, args.baseline)
+        print(f"check_bench: baseline {args.baseline} refreshed from "
+              f"{args.current}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"check_bench: baseline {args.baseline} not found — commit "
+              "one with --write-baseline", file=sys.stderr)
+        return 2
+    return check_pair(args.current, args.baseline, args.tolerance)
 
 
 if __name__ == "__main__":
